@@ -1,0 +1,62 @@
+"""Shared benchmark scaffolding: a ZESHEL-like synthetic domain with the
+paper's experimental protocol (train/test query split, anchor queries =
+train queries, budget-matched CE-call accounting)."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import make_synthetic_ce
+
+
+@dataclass
+class Domain:
+    name: str
+    ce: object
+    r_anc: jax.Array        # (k_q, N) anchor-query scores (offline index)
+    test_q: jax.Array       # (B,) test query ids
+    exact: jax.Array        # (B, N) ground-truth scores for the test split
+
+
+def make_domain(
+    name: str = "yugioh-like",
+    n_items: int = 10000,
+    n_train_q: int = 500,
+    n_test_q: int = 100,
+    seed: int = 0,
+) -> Domain:
+    """Mirrors the paper's setup: |I|≈10K (YuGiOh-scale), Q_train=500."""
+    ce = make_synthetic_ce(
+        jax.random.PRNGKey(seed), n_queries=n_train_q + n_test_q, n_items=n_items
+    )
+    m = ce.full_matrix(jnp.arange(n_train_q + n_test_q))
+    return Domain(
+        name=name,
+        ce=ce,
+        r_anc=m[:n_train_q],
+        test_q=jnp.arange(n_train_q, n_train_q + n_test_q),
+        exact=m[n_train_q:],
+    )
+
+
+def timed(fn, *args, n_iter: int = 1, warmup: int = 0, **kw):
+    """(result, microseconds/call) with block_until_ready."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / n_iter * 1e6
+    return out, us
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The harness CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")

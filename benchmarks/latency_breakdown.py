@@ -1,0 +1,92 @@
+"""Paper Fig. 4: inference latency vs number of rounds, broken into the
+three stages — (1) exact CE scoring of anchors, (2) pseudo-inverse,
+(3) approximate-score matmul — for both full-pinv (the paper's) and the
+incremental-pinv (beyond-paper) variants."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cur, sampling
+
+from .common import emit, make_domain
+
+
+def _run_staged(dom, budget: int, n_rounds: int, incremental: bool, n_iter: int = 1):
+    """Instrumented re-implementation of the round loop with per-stage timers."""
+    score_fn = dom.ce.score_fn()
+    k_s = budget // n_rounds
+    t_ce = t_pinv = t_mm = 0.0
+    key = jax.random.PRNGKey(0)
+
+    for _ in range(n_iter):
+        b = dom.test_q.shape[0]
+        n = dom.r_anc.shape[1]
+        selected = jnp.zeros((b, n), bool)
+        rows = jnp.arange(b)[:, None]
+        anchor_idx = c_test = a_buf = p = e_q = None
+        keys = jax.random.split(key, n_rounds)
+        for r in range(n_rounds):
+            if r == 0:
+                idx_new = sampling.sample_random(keys[r], selected, k_s)
+            else:
+                t0 = time.perf_counter()
+                s_hat = jax.block_until_ready(e_q @ dom.r_anc)
+                t_mm += time.perf_counter() - t0
+                idx_new = sampling.sample_topk(s_hat, selected, k_s)
+            selected = selected.at[rows, idx_new].set(True)
+
+            t0 = time.perf_counter()
+            c_new = jax.block_until_ready(score_fn(dom.test_q, idx_new))
+            t_ce += time.perf_counter() - t0
+
+            cols_new = cur.gather_anchor_columns(dom.r_anc, idx_new)
+            if anchor_idx is None:
+                anchor_idx, c_test, a_buf = idx_new, c_new, cols_new
+            else:
+                anchor_idx = jnp.concatenate([anchor_idx, idx_new], 1)
+                c_test = jnp.concatenate([c_test, c_new], 1)
+                a_buf = jnp.concatenate([a_buf, cols_new], 2)
+
+            t0 = time.perf_counter()
+            if incremental:
+                if p is None:
+                    p = cur.incremental_pinv_init(a_buf)
+                else:
+                    p = jax.vmap(cur.block_pinv_extend)(
+                        a_buf[..., : r * k_s], p, cols_new
+                    )
+            else:
+                p = cur.pinv(a_buf, 1e-4)
+            e_q = jnp.einsum("bk,bkq->bq", c_test, p)
+            jax.block_until_ready(e_q)
+            t_pinv += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        jax.block_until_ready(e_q @ dom.r_anc)
+        t_mm += time.perf_counter() - t0
+    scale = 1e6 / n_iter
+    return t_ce * scale, t_pinv * scale, t_mm * scale
+
+
+def run(dom=None, budget: int = 200, quiet: bool = False):
+    dom = dom or make_domain()
+    out = {}
+    for n_rounds in (1, 2, 5, 10, 20):
+        for inc in (False, True):
+            ce_us, pinv_us, mm_us = _run_staged(dom, budget, n_rounds, inc)
+            total = ce_us + pinv_us + mm_us
+            tag = "inc" if inc else "full"
+            emit(
+                f"latency/Nr{n_rounds}/{tag}", total,
+                f"ce_us={ce_us:.0f};pinv_us={pinv_us:.0f};matmul_us={mm_us:.0f};"
+                f"frac_pinv={pinv_us / total:.2f}",
+            )
+            out[(n_rounds, tag)] = (ce_us, pinv_us, mm_us)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Beyond-paper: incremental block pseudo-inverse vs full SVD recompute.
+
+The paper recomputes pinv(R_anc[:, I_anc]) from scratch each round —
+O(k_q·k_i²) and their Fig. 4 shows it dominating non-CE latency at high
+round counts.  The bordering update is O(k_q·k_i·k_s) per round; this
+benchmark measures speedup and max deviation across round counts."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cur
+
+from .common import emit, timed
+
+
+def run(quiet: bool = False):
+    key = jax.random.PRNGKey(0)
+    out = {}
+    for (k_q, k_i, n_rounds) in ((500, 200, 5), (500, 200, 20), (2000, 500, 10)):
+        k_s = k_i // n_rounds
+        a = jax.random.normal(key, (k_q, k_i))
+
+        @jax.jit
+        def full_rounds(a):
+            ps = []
+            for r in range(1, n_rounds + 1):
+                ps.append(cur.pinv(a[:, : r * k_s]))
+            return ps[-1]
+
+        @jax.jit
+        def inc_rounds(a):
+            p = cur.incremental_pinv_init(a[:, :k_s])
+            for r in range(1, n_rounds):
+                p = cur.block_pinv_extend(
+                    a[:, : r * k_s], p, a[:, r * k_s : (r + 1) * k_s]
+                )
+            return p
+
+        # warmup=1: exclude trace+compile — the paper-relevant number is the
+        # steady-state per-search cost
+        p_full, us_full = timed(full_rounds, a, warmup=1)
+        p_inc, us_inc = timed(inc_rounds, a, warmup=1)
+        err = float(jnp.abs(p_full - p_inc).max())
+        emit(
+            f"pinv/kq{k_q}_ki{k_i}_Nr{n_rounds}", us_inc,
+            f"full_us={us_full:.0f};speedup={us_full / us_inc:.2f}x;max_err={err:.1e}",
+        )
+        out[(k_q, k_i, n_rounds)] = (us_full, us_inc, err)
+    return out
+
+
+if __name__ == "__main__":
+    run()

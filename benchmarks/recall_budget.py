@@ -1,0 +1,88 @@
+"""Paper Fig. 2 / Figs. 9-20: Top-k-Recall vs CE-call budget for ADACUR
+variants, ANNCUR and retrieve-and-rerank baselines, all budget-matched."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AdaCURConfig
+from repro.core import adacur, anncur, retrieval
+
+from .common import Domain, emit, make_domain, timed
+
+BUDGETS = (50, 100, 200, 500)
+KS = (1, 10, 100)
+
+
+def _de_candidates(dom: Domain, noise: float = 1.5, key=jax.random.PRNGKey(9)):
+    """Stand-in first-stage retriever: exact scores + noise (a 'DE_BASE'
+    whose retrieval quality is good but imperfect)."""
+    noisy = dom.exact + noise * jax.random.normal(key, dom.exact.shape)
+    _, order = jax.lax.top_k(noisy, dom.exact.shape[1])
+    return order
+
+
+def run(dom: Domain | None = None, quiet: bool = False):
+    dom = dom or make_domain()
+    score_fn = dom.ce.score_fn()
+    de_order = _de_candidates(dom)
+    rows = []
+    for budget in BUDGETS:
+        k_anchor = budget // 2
+        methods = {}
+
+        cfg = AdaCURConfig(k_anchor=k_anchor, n_rounds=5, budget_ce=budget,
+                           strategy="topk", k_retrieve=100)
+        res, us = timed(
+            lambda: adacur.adacur_search(score_fn, dom.r_anc, dom.test_q, cfg,
+                                         jax.random.PRNGKey(1)))
+        methods["adacur_topk"] = (res, us)
+
+        cfg_s = AdaCURConfig(k_anchor=k_anchor, n_rounds=5, budget_ce=budget,
+                             strategy="softmax", k_retrieve=100)
+        res, us = timed(
+            lambda: adacur.adacur_search(score_fn, dom.r_anc, dom.test_q, cfg_s,
+                                         jax.random.PRNGKey(1)))
+        methods["adacur_softmax"] = (res, us)
+
+        cfg_ns = AdaCURConfig(k_anchor=budget, n_rounds=5, budget_ce=budget,
+                              strategy="topk", split_budget=False, k_retrieve=100)
+        res, us = timed(
+            lambda: adacur.adacur_search(score_fn, dom.r_anc, dom.test_q, cfg_ns,
+                                         jax.random.PRNGKey(1)))
+        methods["adacur_topk_nosplit"] = (res, us)
+
+        # ADACUR seeded by the DE retriever (paper's ADACUR_{DE_BASE+TopK})
+        first = de_order[:, : budget // 5]
+        cfg_de = AdaCURConfig(k_anchor=budget, n_rounds=5, budget_ce=budget,
+                              strategy="topk", split_budget=False,
+                              first_round="retriever", k_retrieve=100)
+        res, us = timed(
+            lambda: adacur.adacur_search(score_fn, dom.r_anc, dom.test_q, cfg_de,
+                                         jax.random.PRNGKey(1), first_anchors=first))
+        methods["adacur_de_topk_nosplit"] = (res, us)
+
+        idx = anncur.build_index(dom.r_anc, k_anchor, key=jax.random.PRNGKey(2))
+        res, us = timed(lambda: anncur.search(score_fn, idx, dom.test_q, budget, 100))
+        methods["anncur"] = (res, us)
+
+        idx_de = anncur.build_index(
+            dom.r_anc, k_anchor, anchor_idx=de_order[0, :k_anchor])
+        res, us = timed(lambda: anncur.search(score_fn, idx_de, dom.test_q, budget, 100))
+        methods["anncur_de"] = (res, us)
+
+        res, us = timed(
+            lambda: retrieval.rerank_baseline(score_fn, de_order, dom.test_q, budget, 100))
+        methods["de_rerank"] = (res, us)
+
+        for name, (res, us) in methods.items():
+            rep = retrieval.evaluate_result(name, res, dom.exact, ks=KS)
+            derived = ";".join(f"recall@{k}={rep.recall[k]:.3f}" for k in KS)
+            emit(f"recall_budget/{name}/B{budget}", us, derived)
+            rows.append((name, budget, rep.recall))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Fig. 3: Top-k-Recall of ADACUR_TopK vs number of rounds
+(N_r in {1,2,5,10,20}); N_r=1 reduces to ANNCUR (all anchors random)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import AdaCURConfig
+from repro.core import adacur, retrieval
+
+from .common import emit, make_domain, timed
+
+ROUNDS = (1, 2, 5, 10, 20)
+
+
+def run(dom=None, budget: int = 200, quiet: bool = False):
+    dom = dom or make_domain()
+    score_fn = dom.ce.score_fn()
+    out = {}
+    for nr in ROUNDS:
+        k_anchor = budget // 2
+        k_anchor -= k_anchor % nr
+        cfg = AdaCURConfig(k_anchor=k_anchor, n_rounds=nr, budget_ce=budget,
+                           strategy="topk", k_retrieve=100)
+        res, us = timed(
+            lambda: adacur.adacur_search(score_fn, dom.r_anc, dom.test_q, cfg,
+                                         jax.random.PRNGKey(1)))
+        rep = retrieval.evaluate_result(f"rounds{nr}", res, dom.exact)
+        derived = ";".join(f"recall@{k}={v:.3f}" for k, v in rep.recall.items())
+        emit(f"rounds_sweep/Nr{nr}/B{budget}", us, derived)
+        out[nr] = rep.recall
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure + kernel micro +
+beyond-paper studies.  Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller domain")
+    args = ap.parse_args()
+
+    from . import (
+        approx_error,
+        common,
+        epsilon_rounds,
+        kernels_micro,
+        latency_breakdown,
+        oracle_sampling,
+        pinv_incremental,
+        recall_budget,
+        rounds_sweep,
+    )
+
+    if args.fast:
+        dom = common.make_domain(n_items=2000, n_train_q=200, n_test_q=60)
+    else:
+        dom = common.make_domain()
+
+    print("name,us_per_call,derived")
+    suites = [
+        ("recall_budget (paper Fig.2/9-20)", lambda: recall_budget.run(dom)),
+        ("rounds_sweep (paper Fig.3)", lambda: rounds_sweep.run(dom)),
+        ("oracle_sampling (paper Fig.5)", lambda: oracle_sampling.run(dom)),
+        ("approx_error (paper Fig.1/7/8)", lambda: approx_error.run(dom)),
+        ("latency_breakdown (paper Fig.4)", lambda: latency_breakdown.run(dom)),
+        ("pinv_incremental (beyond-paper)", pinv_incremental.run),
+        ("epsilon_rounds (beyond-paper)", lambda: epsilon_rounds.run(dom)),
+        ("kernels_micro", kernels_micro.run),
+    ]
+    failed = 0
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception:
+            failed += 1
+            print(f"SUITE-FAILED,{name},", file=sys.stderr)
+            traceback.print_exc()
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

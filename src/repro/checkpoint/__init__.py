@@ -1,0 +1,3 @@
+from . import checkpointer, manager  # noqa: F401
+from .checkpointer import Checkpointer  # noqa: F401
+from .manager import CheckpointManager  # noqa: F401

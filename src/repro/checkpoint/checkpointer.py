@@ -1,0 +1,151 @@
+"""Sharded, async, atomic checkpointing with elastic re-sharding.
+
+Design (no orbax dependency — pure numpy + json):
+
+- every array leaf is saved as one .npy per LOGICAL array (gathered from its
+  shards on save; at real pod scale each host writes only its addressable
+  shards — the layout below keeps one file per leaf so that path is a local
+  change, not a format change);
+- a manifest.json records the tree structure, dtypes, shapes and the
+  PartitionSpec every leaf had at save time;
+- saves are ASYNC (background thread) and ATOMIC (write to step_N.tmp,
+  fsync, rename) — a preempted job never sees a torn checkpoint;
+- restore RESHARDS onto whatever mesh the new job brings (elastic up/down):
+  the manifest's specs are re-resolved against the new mesh, so a 16x16
+  checkpoint restores onto 2x16x16 or 4x4 transparently.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+SEP = "/"
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _spec_to_json(spec: P):
+    return [list(a) if isinstance(a, tuple) else a for a in spec]
+
+
+def _spec_from_json(raw) -> P:
+    return P(*[tuple(a) if isinstance(a, list) else a for a in raw])
+
+
+class Checkpointer:
+    """save(step, tree, specs) / restore(step, mesh) with async + atomic IO."""
+
+    def __init__(self, directory: str, async_save: bool = True):
+        self.dir = directory
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, specs: Any = None) -> None:
+        """specs: optional matching tree of PartitionSpec (for elastic restore)."""
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        spec_map = {}
+        if specs is not None:
+            flat_specs, _ = _flatten_with_paths(specs)
+            spec_map = {k: _spec_to_json(v) for k, v in flat_specs.items()}
+
+        def _write():
+            tmp = os.path.join(self.dir, f"step_{step}.tmp")
+            final = os.path.join(self.dir, f"step_{step}")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            flat, _ = _flatten_with_paths(host_tree)
+            manifest = {"step": step, "leaves": {}}
+            for key, leaf in flat.items():
+                fn = key.replace(SEP, "__") + ".npy"
+                np.save(os.path.join(tmp, fn), leaf)
+                manifest["leaves"][key] = {
+                    "file": fn,
+                    "shape": list(leaf.shape),
+                    "dtype": str(leaf.dtype),
+                    "spec": spec_map.get(key),
+                }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)  # atomic commit
+
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore --------------------------------------------------------------
+
+    def available_steps(self):
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(steps)
+
+    def restore(self, step: int, like: Any, mesh: Optional[Mesh] = None) -> Any:
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs).  With a mesh, each leaf is device_put with the
+        spec recorded at save time re-resolved on the NEW mesh (elastic)."""
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat_like, treedef = _flatten_with_paths(like)
+        leaves_out = {}
+        for key, ref in flat_like.items():
+            meta = manifest["leaves"][key]
+            arr = np.load(os.path.join(path, meta["file"]))
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"checkpoint leaf {key} shape {arr.shape} != expected {ref.shape}"
+                )
+            if mesh is not None and meta["spec"] is not None:
+                spec = _spec_from_json(meta["spec"])
+                # drop mesh axes the new mesh no longer has (elastic down)
+                spec = P(*[
+                    a if _axes_exist(mesh, a) else None for a in spec
+                ])
+                leaves_out[key] = jax.device_put(arr, NamedSharding(mesh, spec))
+            else:
+                leaves_out[key] = jax.numpy.asarray(arr, dtype=ref.dtype)
+        ordered = [leaves_out[k] for k in flat_like]
+        return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+def _axes_exist(mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    axes_t = (axes,) if isinstance(axes, str) else axes
+    return all(a in mesh.shape for a in axes_t)

@@ -1,0 +1,20 @@
+"""Behavior Sequence Transformer (Alibaba)  [arXiv:1905.06874].
+
+embed_dim=32 seq_len=20 n_blocks=1 n_heads=8 mlp=1024-512-256,
+transformer over the user behaviour sequence + target item (joint
+query-item scorer => ADACUR-compatible cross-encoder class).
+"""
+
+from .base import RecSysConfig
+
+CONFIG = RecSysConfig(
+    name="bst",
+    kind="bst",
+    embed_dim=32,
+    seq_len=20,
+    n_blocks=1,
+    n_heads=8,
+    mlp_dims=(1024, 512, 256),
+    n_items=1_000_000,
+    interaction="transformer-seq",
+)

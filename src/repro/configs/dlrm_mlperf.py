@@ -1,0 +1,29 @@
+"""DLRM MLPerf benchmark config (Criteo 1TB)  [arXiv:1906.00091].
+
+n_dense=13 n_sparse=26 embed_dim=128 bot_mlp=13-512-256-128
+top_mlp=1024-1024-512-256-1, dot interaction.  Table sizes are the
+MLPerf/Criteo-Terabyte cardinalities (~880M rows total → row-sharded over
+the whole mesh, see DESIGN.md §5).
+"""
+
+from .base import RecSysConfig
+
+# MLPerf DLRM (Criteo Terabyte, day_0-23) per-field cardinalities.
+CRITEO_TABLE_SIZES = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+CONFIG = RecSysConfig(
+    name="dlrm-mlperf",
+    kind="dlrm",
+    embed_dim=128,
+    n_dense=13,
+    n_sparse=26,
+    bot_mlp=(13, 512, 256, 128),
+    top_mlp=(1024, 1024, 512, 256, 1),
+    table_sizes=CRITEO_TABLE_SIZES,
+    n_items=1_000_000,
+    interaction="dot",
+)

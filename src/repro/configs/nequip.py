@@ -1,0 +1,18 @@
+"""NequIP  [arXiv:2101.03164].
+
+n_layers=5 d_hidden=32 l_max=2 n_rbf=8 cutoff=5 — O(3)-equivariant
+interatomic potential; irrep tensor-product message passing with
+``segment_sum`` scatter (see repro.models.gnn.nequip).
+"""
+
+from .base import GNNConfig
+
+CONFIG = GNNConfig(
+    name="nequip",
+    n_layers=5,
+    d_hidden=32,
+    l_max=2,
+    n_rbf=8,
+    cutoff=5.0,
+    n_species=64,
+)

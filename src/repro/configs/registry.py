@@ -1,0 +1,135 @@
+"""Architecture registry: ``--arch <id>`` → (config, family, shape set).
+
+All ten assigned architectures plus the paper's own cross-encoder backbone
+(``ce-tiny``, the trained end-to-end example model) are selectable here.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+from . import (
+    bert4rec,
+    bst,
+    dlrm_mlperf,
+    granite_moe_1b_a400m,
+    mind,
+    moonshot_v1_16b_a3b,
+    nequip,
+    qwen1_5_110b,
+    qwen3_8b,
+    starcoder2_3b,
+)
+from .base import LMConfig, replace
+from .shapes import SHAPES_BY_FAMILY
+
+
+@dataclass(frozen=True)
+class ArchEntry:
+    arch_id: str
+    family: str            # "lm" | "gnn" | "recsys"
+    config: Any
+    adacur_applicable: bool
+    notes: str = ""
+
+
+# The paper's own model: a small cross-encoder backbone trained by the
+# end-to-end example (examples/train_cross_encoder.py).
+CE_TINY = LMConfig(
+    name="ce-tiny",
+    n_layers=4,
+    d_model=256,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=32,
+    d_ff=1024,
+    vocab_size=512,          # byte-level tokenizer + specials
+    qk_norm=True,
+    rope_theta=10000.0,
+    act="swiglu",
+    causal=False,            # cross-encoders read the joint sequence bidirectionally
+    max_seq_len=512,
+)
+
+
+REGISTRY: Dict[str, ArchEntry] = {
+    "qwen3-8b": ArchEntry("qwen3-8b", "lm", qwen3_8b.CONFIG, True, "primary CE backbone"),
+    "qwen1.5-110b": ArchEntry("qwen1.5-110b", "lm", qwen1_5_110b.CONFIG, True),
+    "starcoder2-3b": ArchEntry("starcoder2-3b", "lm", starcoder2_3b.CONFIG, True),
+    "moonshot-v1-16b-a3b": ArchEntry(
+        "moonshot-v1-16b-a3b", "lm", moonshot_v1_16b_a3b.CONFIG, True, "MoE CE backbone"
+    ),
+    "granite-moe-1b-a400m": ArchEntry(
+        "granite-moe-1b-a400m", "lm", granite_moe_1b_a400m.CONFIG, True, "MoE CE backbone"
+    ),
+    "nequip": ArchEntry(
+        "nequip", "gnn", nequip.CONFIG, False,
+        "no query/item factorization — ADACUR inapplicable (DESIGN.md §4.1)",
+    ),
+    "bst": ArchEntry("bst", "recsys", bst.CONFIG, True, "cross-encoder-class scorer"),
+    "mind": ArchEntry(
+        "mind", "recsys", mind.CONFIG, False,
+        "dual-encoder; used as first-round anchor retriever (DESIGN.md §4.1)",
+    ),
+    "bert4rec": ArchEntry("bert4rec", "recsys", bert4rec.CONFIG, True),
+    "dlrm-mlperf": ArchEntry("dlrm-mlperf", "recsys", dlrm_mlperf.CONFIG, True),
+    "ce-tiny": ArchEntry("ce-tiny", "lm", CE_TINY, True, "paper repro backbone"),
+}
+
+
+def get(arch_id: str) -> ArchEntry:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(REGISTRY)}")
+    return REGISTRY[arch_id]
+
+
+def shapes_for(arch_id: str):
+    """Assigned shape set for this arch (dict name -> shape dataclass)."""
+    return SHAPES_BY_FAMILY[get(arch_id).family]
+
+
+def cells() -> Tuple[Tuple[str, str], ...]:
+    """All assigned (arch x shape) dry-run cells — 40 total."""
+    out = []
+    for arch_id, entry in REGISTRY.items():
+        if arch_id == "ce-tiny":
+            continue  # extra, not one of the 40 assigned cells
+        for shape_name in SHAPES_BY_FAMILY[entry.family]:
+            out.append((arch_id, shape_name))
+    return tuple(out)
+
+
+def smoke_config(arch_id: str):
+    """Reduced config of the same family for CPU smoke tests."""
+    entry = get(arch_id)
+    cfg = entry.config
+    if entry.family == "lm":
+        moe = cfg.moe
+        if moe is not None:
+            moe = replace(
+                moe, n_experts=4, top_k=2, d_expert=64,
+                n_shared_experts=min(moe.n_shared_experts, 1),
+                first_k_dense=min(moe.first_k_dense, 1), d_ff_dense=128,
+                # generous capacity: smoke tests check decode==encode, which
+                # only holds when no batch-dependent capacity drops occur
+                capacity_factor=8.0,
+            )
+        return replace(
+            cfg, n_layers=2, d_model=64, n_heads=4,
+            n_kv_heads=max(1, 4 * cfg.n_kv_heads // cfg.n_heads),
+            head_dim=16, d_ff=128, vocab_size=256, moe=moe,
+            max_seq_len=1024, dtype="float32",
+        )
+    if entry.family == "gnn":
+        return replace(cfg, n_layers=2, d_hidden=4, n_rbf=4, n_species=8)
+    # recsys
+    kw = dict(embed_dim=16, n_items=1000, seq_len=min(cfg.seq_len, 8))
+    if cfg.kind == "dlrm":
+        kw.update(
+            bot_mlp=(13, 32, 16), top_mlp=(64, 32, 1),
+            table_sizes=tuple(min(s, 100) for s in cfg.table_sizes),
+        )
+    if cfg.kind in ("bst", "bert4rec"):
+        kw.update(mlp_dims=(32, 16) if cfg.kind == "bst" else (32,))
+    return replace(cfg, **kw)

@@ -1,0 +1,13 @@
+"""Core library: the paper's contribution (ADACUR) and its substrate.
+
+- ``cur``       CUR decomposition, pseudo-inverse (full + incremental)
+- ``sampling``  anchor sampling strategies (TopK/SoftMax/Random + oracles)
+- ``adacur``    Algorithm 1: batched multi-round adaptive anchor selection
+- ``anncur``    fixed-anchor baseline (Yadav et al. 2022)
+- ``retrieval`` budget-matched retrieve-and-rerank + recall metrics
+- ``index``     offline R_anc builder (resumable, shardable)
+"""
+
+from . import adacur, anncur, cur, index, retrieval, sampling  # noqa: F401
+from .adacur import AdaCURResult, adacur_search, make_jitted_search  # noqa: F401
+from .anncur import ANNCURIndex, build_index  # noqa: F401

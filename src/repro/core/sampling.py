@@ -1,0 +1,124 @@
+"""Anchor-item sampling strategies (paper Algorithm 3 + §3.2 oracles).
+
+All strategies operate on a batch of queries; masking of already-selected
+anchors is done with an explicit (B, N) boolean mask so the whole multi-round
+loop stays jit-compatible.  SoftMax sampling without replacement uses the
+Gumbel-top-k trick (Kool et al. 2019) — top-k over ``logits + Gumbel noise``
+is an exact sample without replacement from the softmax distribution.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _masked_logits(scores: jax.Array, selected: jax.Array, temp: float) -> jax.Array:
+    """SoftMax(S) with already-selected items masked out (Alg. 3 lines 7-8)."""
+    logits = scores / jnp.asarray(temp, scores.dtype)
+    return jnp.where(selected, NEG_INF, logits)
+
+
+def sample_topk(
+    scores: jax.Array, selected: jax.Array, k: int, temp: float = 1.0
+) -> jax.Array:
+    """TopK strategy: greedily pick the k highest-scoring unselected items."""
+    logits = _masked_logits(scores, selected, temp)
+    _, idx = jax.lax.top_k(logits, k)
+    return idx
+
+
+def sample_softmax(
+    key: jax.Array, scores: jax.Array, selected: jax.Array, k: int, temp: float = 1.0
+) -> jax.Array:
+    """SoftMax strategy: sample k items w/o replacement ∝ softmax(scores)."""
+    logits = _masked_logits(scores, selected, temp)
+    g = jax.random.gumbel(key, logits.shape, dtype=logits.dtype)
+    _, idx = jax.lax.top_k(logits + g, k)
+    return idx
+
+
+def sample_random(
+    key: jax.Array, selected: jax.Array, k: int
+) -> jax.Array:
+    """Random strategy: uniform w/o replacement over unselected items."""
+    logits = jnp.where(selected, NEG_INF, 0.0)
+    g = jax.random.gumbel(key, logits.shape, dtype=logits.dtype)
+    _, idx = jax.lax.top_k(logits + g, k)
+    return idx
+
+
+def sample(
+    strategy: str,
+    key: jax.Array,
+    scores: jax.Array,
+    selected: jax.Array,
+    k: int,
+    temp: float = 1.0,
+) -> jax.Array:
+    """Dispatch on the paper's three strategies (Algorithm 3)."""
+    if strategy == "topk":
+        return sample_topk(scores, selected, k, temp)
+    if strategy == "softmax":
+        return sample_softmax(key, scores, selected, k, temp)
+    if strategy == "random":
+        return sample_random(key, selected, k)
+    raise ValueError(f"unknown sampling strategy '{strategy}'")
+
+
+# ---------------------------------------------------------------------------
+# Oracle strategies (paper §3.2) — have access to EXACT CE scores of all
+# items; used to analyse why adaptive anchor selection works.
+# ---------------------------------------------------------------------------
+
+
+def oracle_topk(
+    key: jax.Array,
+    exact_scores: jax.Array,
+    k_i: int,
+    k_m: int = 0,
+    eps: float = 0.0,
+) -> jax.Array:
+    """TopK^O_{k_m,eps}: mask top-k_m items, take the next (1-eps)·k_i items
+    greedily, fill the remaining eps·k_i uniformly at random."""
+    b, n = exact_scores.shape
+    n_greedy = int(round((1.0 - eps) * k_i))
+    n_rand = k_i - n_greedy
+    order = jnp.argsort(-exact_scores, axis=-1)          # (B, N) descending
+    greedy = order[:, k_m : k_m + n_greedy]
+    if n_rand == 0:
+        return greedy
+    sel = jnp.zeros((b, n), dtype=bool)
+    rows = jnp.arange(b)[:, None]
+    sel = sel.at[rows, order[:, : k_m + n_greedy]].set(True)
+    rand = sample_random(key, sel, n_rand)
+    return jnp.concatenate([greedy, rand], axis=-1)
+
+
+def oracle_softmax(
+    key: jax.Array,
+    exact_scores: jax.Array,
+    k_i: int,
+    k_m: int = 0,
+    eps: float = 0.0,
+    temp: float = 1.0,
+) -> jax.Array:
+    """SoftMax^O_{k_m,eps}: mask top-k_m, sample (1-eps)·k_i by softmax of the
+    exact scores, fill eps·k_i uniformly at random."""
+    b, n = exact_scores.shape
+    n_soft = int(round((1.0 - eps) * k_i))
+    n_rand = k_i - n_soft
+    order = jnp.argsort(-exact_scores, axis=-1)
+    rows = jnp.arange(b)[:, None]
+    sel = jnp.zeros((b, n), dtype=bool)
+    if k_m > 0:
+        sel = sel.at[rows, order[:, :k_m]].set(True)
+    k_soft, k_rand = jax.random.split(key)
+    soft = sample_softmax(k_soft, exact_scores, sel, n_soft, temp)
+    if n_rand == 0:
+        return soft
+    sel = sel.at[rows, soft].set(True)
+    rand = sample_random(k_rand, sel, n_rand)
+    return jnp.concatenate([soft, rand], axis=-1)

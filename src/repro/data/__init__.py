@@ -1,0 +1,1 @@
+from . import loader, synthetic  # noqa: F401

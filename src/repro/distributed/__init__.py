@@ -1,0 +1,1 @@
+from . import compression, cross_pod, decode_attention, fault_tolerance, pipeline, sharding  # noqa: F401

@@ -1,0 +1,70 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization).
+
+At 512+ chips the cross-pod data-center links are ~10x slower than intra-pod
+ICI, so the "pod" grad all-reduce is the scaling bottleneck.  Two standard
+compressors, both with error feedback (the residual re-enters the next
+step's gradient, preserving convergence — Karimireddy et al. 2019):
+
+- int8 quantization: per-tensor absmax scale, 4x traffic cut vs f32;
+- top-k sparsification: keep the largest |g| fraction per tensor.
+
+These are pure value-transformations wrapped around the psum the step
+function already performs, so they compose with any optimizer.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_roundtrip_with_feedback(grads, error):
+    """Returns (compressed-then-decompressed grads, new error residual).
+
+    In the distributed step the int8 payload is what crosses the pod link;
+    the residual (quantization error) is added back into the NEXT step's
+    gradient so nothing is lost asymptotically."""
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        q, s = int8_quantize(g)
+        deq = int8_dequantize(q, s)
+        return deq, g - deq
+
+    pairs = jax.tree.map(one, grads, error)
+    deq = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, new_err
+
+
+def topk_sparsify_with_feedback(grads, error, frac: float = 0.01):
+    """Keep the top-|g| ``frac`` entries per tensor; rest feeds back."""
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        flat = g.reshape(-1)
+        k = max(1, int(flat.size * frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        kept = jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+        return kept, g - kept
+
+    pairs = jax.tree.map(one, grads, error)
+    kept = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return kept, new_err
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,99 @@
+"""Straggler mitigation + heartbeat monitoring (host-side control plane).
+
+On a 1000-node job the slowest host sets the step time.  The watchdog
+measures per-step wall time against a rolling deadline; persistent
+stragglers trigger a policy decision (log + alert, skip the host's data
+shard, or request an elastic down-scale — the latter two are simulated
+here and exercised in tests).
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional
+
+
+@dataclass
+class StepStats:
+    step: int
+    seconds: float
+    straggler: bool
+
+
+class StragglerWatchdog:
+    """Rolling-median deadline: a step slower than ``threshold`` x median is
+    flagged; ``on_straggler`` fires after ``patience`` consecutive flags."""
+
+    def __init__(
+        self,
+        threshold: float = 2.0,
+        window: int = 20,
+        patience: int = 3,
+        on_straggler: Optional[Callable[[StepStats], None]] = None,
+    ):
+        self.threshold = threshold
+        self.window: Deque[float] = collections.deque(maxlen=window)
+        self.patience = patience
+        self.on_straggler = on_straggler
+        self.consecutive = 0
+        self.history: List[StepStats] = []
+
+    def _median(self) -> float:
+        if not self.window:
+            return float("inf")
+        s = sorted(self.window)
+        return s[len(s) // 2]
+
+    def observe(self, step: int, seconds: float) -> StepStats:
+        med = self._median()
+        straggler = len(self.window) >= 5 and seconds > self.threshold * med
+        if straggler:
+            self.consecutive += 1
+        else:
+            self.consecutive = 0
+            self.window.append(seconds)   # only healthy steps update the baseline
+        stats = StepStats(step, seconds, straggler)
+        self.history.append(stats)
+        if straggler and self.consecutive >= self.patience and self.on_straggler:
+            self.on_straggler(stats)
+            self.consecutive = 0
+        return stats
+
+    def timed(self, step: int, fn: Callable, *args, **kw):
+        t0 = time.monotonic()
+        out = fn(*args, **kw)
+        self.observe(step, time.monotonic() - t0)
+        return out
+
+
+class HeartbeatMonitor:
+    """Host liveness registry: hosts report heartbeats; hosts silent past
+    ``timeout`` are declared dead and listed for the elastic controller."""
+
+    def __init__(self, timeout: float = 60.0):
+        self.timeout = timeout
+        self.last_seen: Dict[str, float] = {}
+
+    def beat(self, host: str, now: Optional[float] = None) -> None:
+        self.last_seen[host] = now if now is not None else time.monotonic()
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[str]:
+        now = now if now is not None else time.monotonic()
+        return [h for h, t in self.last_seen.items() if now - t > self.timeout]
+
+    def healthy_count(self, now: Optional[float] = None) -> int:
+        return len(self.last_seen) - len(self.dead_hosts(now))
+
+
+def elastic_plan(n_healthy: int, axis_candidates=((2, 16, 16), (16, 16), (8, 16), (8, 8), (4, 8), (4, 4), (2, 2), (1, 1))):
+    """Largest mesh shape (from the supported ladder) that fits the surviving
+    hosts — checkpoint restore re-shards onto it (repro.checkpoint)."""
+    for shape in axis_candidates:
+        n = 1
+        for s in shape:
+            n *= s
+        if n <= n_healthy:
+            return shape
+    return (1,)

@@ -1,0 +1,134 @@
+"""Logical-axis sharding rules -> PartitionSpec trees.
+
+Model inits return spec trees whose leaves are tuples of *logical* axis
+names (("embed","heads","head_dim"), ...).  This module translates them to
+``PartitionSpec``s for a concrete mesh:
+
+- "data"  = combined DP/FSDP axis (params FSDP-shard their "embed"/"vocab"
+  dims here; batches shard here and, multi-pod, on "pod" too);
+- "model" = tensor/expert parallel axis;
+- "pod"   = cross-pod data parallelism (never used for param FSDP — param
+  all-gathers stay on intra-pod ICI, only grad reduction crosses pods).
+
+Rules are divisibility-checked per tensor: a logical dim that does not
+divide by its mesh axis (e.g. kv_heads=8 on model=16) falls back to
+replication, and a mesh axis may appear only once per spec (first logical
+dim wins; e.g. MoE (expert, embed, mlp) gives expert->model, embed->data,
+mlp->replicated).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[str, Tuple[str, ...], None]
+
+# logical axis -> preferred mesh axes (tried in order; tuples mean "shard
+# this one dim over several mesh axes", e.g. huge embedding-table rows)
+DEFAULT_RULES: Dict[str, Sequence[Axes]] = {
+    # LM
+    "vocab": ("model",),
+    "embed": ("data",),            # FSDP
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (None,),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "layers": (None,),
+    "seq": (None,),
+    "unit": (None,),
+    # recsys
+    "table_rows": (("pod", "data", "model"), ("data", "model"), ("data",)),
+    "mlp_in": ("data",),
+    "mlp_out": ("model",),
+    "interest": (None,),
+    # gnn
+    "feat": (None,),
+    "species": (None,),
+    "ch": (None,),
+    "ch_in": (None,),
+    "rbf": (None,),
+    "radial_out": (None,),
+}
+
+
+def _axis_size(mesh: Mesh, axes: Axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def spec_for(
+    mesh: Mesh,
+    logical: Tuple[str, ...],
+    shape: Tuple[int, ...],
+    rules: Optional[Dict[str, Sequence[Axes]]] = None,
+) -> P:
+    """Translate one logical-axes tuple into a PartitionSpec."""
+    rules = rules or DEFAULT_RULES
+    used: set = set()
+    out = []
+    for name, dim in zip(logical, shape):
+        chosen: Axes = None
+        for cand in rules.get(name, (None,)):
+            if cand is None:
+                break
+            cand_t = (cand,) if isinstance(cand, str) else cand
+            if any(a not in mesh.shape for a in cand_t):
+                continue
+            if any(a in used for a in cand_t):
+                continue
+            if dim % _axis_size(mesh, cand_t) != 0:
+                continue
+            chosen = cand if isinstance(cand, str) else tuple(cand_t)
+            used.update(cand_t)
+            break
+        out.append(chosen)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, str) for e in x)
+
+
+def tree_specs(mesh: Mesh, params, logical_specs, rules=None):
+    """Map a whole (params, logical-spec) tree to PartitionSpecs.
+
+    The logical-spec tree leads the traversal (its leaves are tuples of
+    axis-name strings, which are themselves pytrees, so it must be primary
+    with an ``is_leaf`` that stops on them)."""
+    return jax.tree.map(
+        lambda s, p: spec_for(mesh, s, p.shape, rules),
+        logical_specs,
+        params,
+        is_leaf=_is_axes,
+    )
+
+
+def tree_shardings(mesh: Mesh, params, logical_specs, rules=None):
+    specs = tree_specs(mesh, params, logical_specs, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that shard the batch dimension (pod composes with data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(mesh: Mesh, extra_dims: int = 1) -> P:
+    return P(batch_axes(mesh), *([None] * extra_dims))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

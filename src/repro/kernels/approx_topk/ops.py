@@ -1,0 +1,27 @@
+"""Public fused approx-score->top-k op: kernel tiles + tiny global merge."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import approx_topk_tiles
+
+
+@partial(jax.jit, static_argnames=("k", "tile", "interpret"))
+def approx_topk_op(e_q, r_anc, anchors, k: int, *, tile: int = 512, interpret: bool = True):
+    """Fused  top-k(mask(e_q @ R_anc))  ->  (vals (B,k), idx (B,k)).
+
+    ``anchors`` (B, A) are suppressed item ids (pad with -1).
+    """
+    vals, idx = approx_topk_tiles(
+        e_q, r_anc, anchors, k, tile=tile, interpret=interpret
+    )
+    b, n_tiles, _ = vals.shape
+    flat_v = vals.reshape(b, n_tiles * k)
+    flat_i = idx.reshape(b, n_tiles * k)
+    top_v, pos = jax.lax.top_k(flat_v, k)                  # merge: n_tiles*k ≪ N
+    top_i = jnp.take_along_axis(flat_i, pos, axis=1)
+    return top_v, top_i

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: materialize S_hat, mask anchors, full top-k."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def approx_topk_reference(
+    e_q: jax.Array,       # (B, k_q)
+    r_anc: jax.Array,     # (k_q, N)
+    anchors: jax.Array,   # (B, A) global ids to mask (-1 = unused)
+    k: int,
+):
+    scores = e_q.astype(jnp.float32) @ r_anc.astype(jnp.float32)   # (B, N)
+    n = scores.shape[1]
+    ids = jnp.arange(n)
+    hit = (ids[None, :, None] == anchors[:, None, :]).any(axis=2)
+    scores = jnp.where(hit, NEG_INF, scores)
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)

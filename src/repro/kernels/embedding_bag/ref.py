@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the embedding-bag kernel (take + reduce)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_reference(table: jax.Array, hot_ids: jax.Array, mode: str = "sum"):
+    emb = jnp.take(table, hot_ids, axis=0)      # (B, H, dim)
+    if mode == "sum":
+        return emb.sum(axis=1)
+    if mode == "mean":
+        return emb.mean(axis=1)
+    raise ValueError(mode)

@@ -1,0 +1,20 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+``interpret=True`` executes the kernel body on CPU (how this container
+validates it); on a real TPU the same call lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import flash_attention
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention_op(q, k, v, *, causal=True, block_q=128, block_k=128, interpret=True):
+    return flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k, interpret=interpret
+    )

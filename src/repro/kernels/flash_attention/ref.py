@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(
+    q: jax.Array,           # (B, Lq, H, hd)
+    k: jax.Array,           # (B, Lk, KV, hd)
+    v: jax.Array,
+    causal: bool = True,
+) -> jax.Array:
+    b, lq, h, hd = q.shape
+    _, lk, n_kv, _ = k.shape
+    rep = h // n_kv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (hd ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((lq, lk), dtype=bool), k=lk - lq)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

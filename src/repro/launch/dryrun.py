@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile EVERY (arch x shape) cell on the
+production mesh, record memory/cost analysis + collective bytes.
+
+MUST be run as a standalone process (the XLA flag above has to land before
+jax initializes its backend — hence the import-order violation).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --cell qwen3-8b:train_4k \
+      [--multi-pod] [--out results/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from ..configs import registry
+from . import mesh as mesh_lib, steps as steps_lib
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2, "f8e4m3fn": 1,
+    "u1": 1, "s1": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every typed shape literal in an HLO line segment."""
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the compiled HLO.
+
+    Collective lines look like:  %x = bf16[...]{...} all-gather(...), ...
+    — the result shape is the post-collective (gathered) size, a reasonable
+    proxy for link traffic per op (all-reduce moves ~2x in a ring; the
+    roofline applies op-specific factors downstream)."""
+    out: dict = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        # bytes of the result shape(s): left of the op name
+        lhs = line.split(m.group(1))[0]
+        b = _shape_bytes(lhs)
+        if b:
+            d = out.setdefault(kind, {"count": 0, "bytes": 0})
+            d["count"] += 1
+            d["bytes"] += b
+    return out
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_dir: str) -> dict:
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    bundle = steps_lib.build_cell(arch_id, shape_name, mesh)
+    with mesh:
+        jitted = jax.jit(
+            bundle.step,
+            in_shardings=bundle.in_shardings,
+            out_shardings=bundle.out_shardings,
+            donate_argnums=bundle.donate,
+        )
+        lowered = jitted.lower(*bundle.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    mem_d = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            mem_d[k] = getattr(mem, k, None)
+    cost_d = {}
+    if cost:
+        for k in ("flops", "bytes accessed", "transcendentals", "utilization operand 0 {}"):
+            if k in cost:
+                cost_d[k] = cost[k]
+        cost_d = {k: v for k, v in cost.items() if isinstance(v, (int, float))}
+
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    rec = {
+        "cell": f"{arch_id}:{shape_name}",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": int(n_chips),
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem_d,
+        "cost": {k: cost_d[k] for k in ("flops", "bytes accessed") if k in cost_d},
+        "collectives": coll,
+        "model_flops": bundle.model_flops,
+        "notes": bundle.notes,
+        "hlo_bytes": len(hlo),
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch_id}__{shape_name}__{'mp' if multi_pod else 'sp'}".replace("/", "_")
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", help="arch:shape, e.g. qwen3-8b:train_4k")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    cells = (
+        registry.cells()
+        if args.all
+        else [tuple(args.cell.split(":", 1))]
+    )
+    n_fail = 0
+    for arch_id, shape_name in cells:
+        try:
+            rec = run_cell(arch_id, shape_name, args.multi_pod, args.out)
+            mem = rec["memory"].get("temp_size_in_bytes")
+            print(
+                f"OK   {rec['cell']:42s} mesh={rec['mesh']} "
+                f"compile={rec['compile_s']}s temp={mem} "
+                f"flops={rec['cost'].get('flops')}",
+                flush=True,
+            )
+        except Exception as e:
+            n_fail += 1
+            tag = f"{arch_id}__{shape_name}__{'mp' if args.multi_pod else 'sp'}"
+            os.makedirs(args.out, exist_ok=True)
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(
+                    {"cell": f"{arch_id}:{shape_name}", "ok": False,
+                     "error": f"{type(e).__name__}: {e}"},
+                    f, indent=1,
+                )
+            print(f"FAIL {arch_id}:{shape_name}: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

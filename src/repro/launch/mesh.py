@@ -1,0 +1,29 @@
+"""Production mesh factory.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — jax locks the device count on first backend
+init, and the 512-device placeholder flag must be set before that
+(launch/dryrun.py sets it as its very first lines).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod; 2 pods when multi_pod.
+
+    Axes: ("data", "model") single pod, ("pod", "data", "model") multi-pod.
+    "data" = DP/FSDP, "model" = TP/EP/sequence-parallel-KV, "pod" = cross-pod
+    DP (grad-reduce only crosses pods — see repro.distributed.sharding).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Elastic variant: any (shape, axes) — checkpoint restore re-shards
+    between meshes built here (see repro.checkpoint)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

@@ -1,0 +1,146 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape) cell, derive the three roofline terms on TPU v5e:
+
+    compute term    = FLOPs        / (chips x 197e12 FLOP/s bf16)
+    memory term     = HLO bytes    / (chips x 819e9  B/s HBM)
+    collective term = link bytes   / (chips x 50e9   B/s ICI per link)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes (PER-PARTITION on
+this backend) and the HLO collective parse from dryrun.py for link bytes.
+
+Two documented corrections:
+- XLA's CPU cost model counts while-loop BODIES ONCE (scan over layers,
+  grad-accumulation loops, edge-chunk scans) — compiled FLOPs therefore
+  undercount looped work.  We report BOTH the raw HLO term and the
+  analytic-model term (MODEL_FLOPS = 6·N·D dense / 6·N_active·D MoE),
+  and use max(hlo, analytic) for the bottleneck call.
+- collective 'bytes' are result-shape sums; all-reduce is costed at 2x
+  (ring reduce-scatter + all-gather), all-to-all at 1x, all-gather /
+  reduce-scatter at 1x, collective-permute at 1x.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline --dir results/dryrun [--mesh sp]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # B/s / chip
+LINK_BW = 50e9              # B/s / link
+COLL_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+@dataclass
+class Roofline:
+    cell: str
+    mesh: str
+    chips: int
+    t_compute_hlo: float
+    t_compute_model: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops: float
+    useful_frac: float
+    temp_bytes: int
+    notes: str
+
+    @property
+    def step_time(self) -> float:
+        return max(self.t_compute_model, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of step time spent at the compute roof (the score)."""
+        return self.t_compute_model / max(self.step_time, 1e-30)
+
+
+def analyze_record(rec: dict) -> Roofline:
+    chips = rec["n_chips"]
+    hlo_flops = float(rec["cost"].get("flops", 0.0))          # per partition
+    hlo_bytes = float(rec["cost"].get("bytes accessed", 0.0)) # per partition
+    model_flops = float(rec["model_flops"]) / chips           # per chip
+    coll_bytes = sum(
+        v["bytes"] * COLL_FACTOR.get(k, 1.0)
+        for k, v in rec.get("collectives", {}).items()
+    )  # summed over the program; per-device link traffic
+    t_c_hlo = hlo_flops / PEAK_FLOPS
+    t_c_model = model_flops / PEAK_FLOPS
+    t_m = hlo_bytes / HBM_BW
+    t_coll = coll_bytes / LINK_BW
+    t_c = max(t_c_hlo, t_c_model)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        cell=rec["cell"],
+        mesh=rec["mesh"],
+        chips=chips,
+        t_compute_hlo=t_c_hlo,
+        t_compute_model=t_c_model,
+        t_memory=t_m,
+        t_collective=t_coll,
+        bottleneck=bottleneck,
+        model_flops=float(rec["model_flops"]),
+        hlo_flops=hlo_flops * chips,
+        useful_frac=min(1.0, model_flops / hlo_flops) if hlo_flops else 0.0,
+        temp_bytes=rec["memory"].get("temp_size_in_bytes", 0),
+        notes=rec.get("notes", ""),
+    )
+
+
+def load_all(directory: str, mesh_tag: str = "sp"):
+    out = []
+    for path in sorted(glob.glob(os.path.join(directory, f"*__{mesh_tag}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("ok"):
+            out.append(analyze_record(rec))
+    return out
+
+
+def print_table(rows):
+    hdr = (f"{'cell':<42} {'comp(ms)':>9} {'mem(ms)':>8} {'coll(ms)':>9} "
+           f"{'bound':>10} {'roof%':>6} {'temp(GB)':>9}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(
+            f"{r.cell:<42} {r.t_compute_model*1e3:>9.3f} {r.t_memory*1e3:>8.3f} "
+            f"{r.t_collective*1e3:>9.3f} {r.bottleneck:>10} "
+            f"{r.roofline_frac*100:>5.1f}% {r.temp_bytes/1e9:>9.2f}"
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="sp", choices=("sp", "mp"))
+    ap.add_argument("--json-out", default="")
+    args = ap.parse_args()
+    rows = load_all(args.dir, args.mesh)
+    print_table(rows)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump([r.__dict__ for r in rows], f, indent=1)
+    worst = sorted(rows, key=lambda r: r.roofline_frac)[:3]
+    print("\nworst roofline fraction (hillclimb candidates):")
+    for r in worst:
+        print(f"  {r.cell}: {r.roofline_frac*100:.1f}% ({r.bottleneck}-bound)")
+
+
+if __name__ == "__main__":
+    main()

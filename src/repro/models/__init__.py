@@ -1,0 +1,1 @@
+from . import cross_encoder, layers, moe, transformer  # noqa: F401

@@ -1,0 +1,1 @@
+from . import nequip, sampler  # noqa: F401

@@ -1,0 +1,1 @@
+from . import bert4rec, bst, dlrm, embedding, mind  # noqa: F401

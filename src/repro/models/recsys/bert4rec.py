@@ -1,0 +1,127 @@
+"""BERT4Rec  [arXiv:1904.06690]: bidirectional transformer over the
+interaction sequence.
+
+Two scoring modes:
+- ``user_logits``: the standard masked-position prediction (factorized
+  output layer tied to the item table) — the cheap retriever;
+- ``score_candidates``: candidate-conditioned joint scoring — the candidate
+  replaces the [MASK] slot and a coherence head reads a scalar off the
+  sequence, one full transformer pass per (user, item) pair.  This is the
+  cross-encoder-class re-ranker mode ADACUR accelerates (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...configs.base import RecSysConfig
+from .. import layers
+
+MASK_SLOT = 0  # candidate/[MASK] occupies the final position
+
+
+def init_bert4rec(key, cfg: RecSysConfig):
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 4 + cfg.n_blocks)
+    params = {}
+    specs = {}
+    # row 0 of the item table doubles as the [MASK] embedding
+    n_rows = (cfg.n_items + 1 + 511) // 512 * 512   # pad to shardable multiple
+    params["item_emb"], specs["item_emb"] = layers.dense_init(
+        ks[0], (n_rows, d), ("table_rows", "embed"), scale=0.05
+    )
+    params["pos_emb"], specs["pos_emb"] = layers.dense_init(
+        ks[1], (cfg.seq_len + 1, d), ("seq", "embed"), scale=0.05
+    )
+    blocks = []
+    bspecs = []
+    for i in range(cfg.n_blocks):
+        kb = jax.random.split(ks[2 + i], 6)
+        hd = d // cfg.n_heads
+        blk = {
+            "wq": layers.dense_init(kb[0], (d, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+            "wk": layers.dense_init(kb[1], (d, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+            "wv": layers.dense_init(kb[2], (d, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+            "wo": layers.dense_init(kb[3], (cfg.n_heads, hd, d), ("heads", "head_dim", "embed")),
+            "ln1": layers.ones_init((d,), ("embed",)),
+            "ln1b": layers.zeros_init((d,), ("embed",)),
+            "ffn_w1": layers.dense_init(kb[4], (d, cfg.mlp_dims[0]), ("embed", "mlp")),
+            "ffn_b1": layers.zeros_init((cfg.mlp_dims[0],), ("mlp",)),
+            "ffn_w2": layers.dense_init(kb[5], (cfg.mlp_dims[0], d), ("mlp", "embed")),
+            "ffn_b2": layers.zeros_init((d,), ("embed",)),
+            "ln2": layers.ones_init((d,), ("embed",)),
+            "ln2b": layers.zeros_init((d,), ("embed",)),
+        }
+        p, s = layers.split_tree(blk)
+        blocks.append(p)
+        bspecs.append(s)
+    params["blocks"] = blocks
+    specs["blocks"] = bspecs
+    params["score_head"], specs["score_head"] = layers.dense_init(
+        ks[-1], (d, 1), ("embed", "unit"), scale=0.02
+    )
+    return params, specs
+
+
+def _block(blk, x):
+    q = jnp.einsum("bld,dhk->blhk", x, blk["wq"])
+    k = jnp.einsum("bld,dhk->blhk", x, blk["wk"])
+    v = jnp.einsum("bld,dhk->blhk", x, blk["wv"])
+    o = layers.attention_ref(q, k, v, causal=False)
+    x = layers.layernorm(x + jnp.einsum("blhk,hkd->bld", o, blk["wo"]), blk["ln1"], blk["ln1b"])
+    h = jax.nn.gelu(x @ blk["ffn_w1"] + blk["ffn_b1"]) @ blk["ffn_w2"] + blk["ffn_b2"]
+    return layers.layernorm(x + h, blk["ln2"], blk["ln2b"])
+
+
+def _encode(params, seq: jax.Array):
+    """seq (B, L+1) item ids (0 = [MASK]) -> hidden (B, L+1, d)."""
+    x = jnp.take(params["item_emb"], seq, axis=0) + params["pos_emb"][None]
+    for blk in params["blocks"]:
+        x = _block(blk, x)
+    return x
+
+
+def user_logits(params, history: jax.Array, cfg: RecSysConfig):
+    """Standard BERT4Rec: [MASK] appended, logits = h_mask @ item_emb^T."""
+    b = history.shape[0]
+    seq = jnp.concatenate(
+        [history, jnp.zeros((b, 1), history.dtype)], axis=1
+    )
+    h = _encode(params, seq)[:, -1, :]                  # masked position
+    logits = h @ params["item_emb"][1:].T               # skip [MASK] row
+    pad_mask = jnp.arange(logits.shape[-1]) < cfg.n_items  # hide pad rows
+    return jnp.where(pad_mask, logits, -1e30)
+
+
+def score_candidates(params, history: jax.Array, cand: jax.Array, cfg: RecSysConfig):
+    """Joint mode: candidate fills the [MASK] slot; scalar coherence score.
+
+    history (B, L), cand (B, K) -> (B, K); K full transformer passes/query.
+    """
+    b, k = cand.shape
+    hist_r = jnp.repeat(history, k, axis=0)             # (B*K, L)
+    seq = jnp.concatenate([hist_r, cand.reshape(-1, 1) + 1], axis=1)
+    h = _encode(params, seq)
+    pooled = h.mean(axis=1)
+    return (pooled @ params["score_head"])[:, 0].reshape(b, k)
+
+
+def mlm_loss(params, history: jax.Array, target: jax.Array, cfg: RecSysConfig,
+             n_neg: int = 512, key=None):
+    """Masked-item prediction with SAMPLED softmax — full softmax over the
+    1M-item vocabulary would materialize (B, N) logits (262 GB at the
+    train_batch shape); uniform negative sampling is standard BERT4Rec
+    practice at catalog scale."""
+    b = history.shape[0]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    seq = jnp.concatenate([history, jnp.zeros((b, 1), history.dtype)], axis=1)
+    h = _encode(params, seq)[:, -1, :]                     # (B, d)
+    neg = jax.random.randint(key, (b, n_neg), 0, cfg.n_items)
+    e_pos = jnp.take(params["item_emb"], target + 1, axis=0)
+    e_neg = jnp.take(params["item_emb"], neg + 1, axis=0)
+    pos = jnp.einsum("bd,bd->b", h, e_pos)
+    negs = jnp.einsum("bd,bmd->bm", h, e_neg)
+    logits = jnp.concatenate([pos[:, None], negs], axis=1)
+    return -jax.nn.log_softmax(logits, axis=-1)[:, 0].mean()

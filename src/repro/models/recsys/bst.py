@@ -1,0 +1,101 @@
+"""Behavior Sequence Transformer  [arXiv:1905.06874].
+
+The target item is appended to the user behaviour sequence BEFORE the
+transformer block, so each (user, item) score is a joint forward pass —
+a genuine cross-encoder-class scorer (ADACUR target, DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...configs.base import RecSysConfig
+from .. import layers
+from . import embedding as emb_lib
+
+
+def init_bst(key, cfg: RecSysConfig):
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 10)
+    params = {}
+    specs = {}
+    n_rows = (cfg.n_items + 511) // 512 * 512   # pad to shardable multiple
+    params["item_emb"], specs["item_emb"] = layers.dense_init(
+        ks[0], (n_rows, d), ("table_rows", "embed"), scale=0.05
+    )
+    params["pos_emb"], specs["pos_emb"] = layers.dense_init(
+        ks[1], (cfg.seq_len + 1, d), ("seq", "embed"), scale=0.05
+    )
+    # one post-LN transformer block (paper: n_blocks=1)
+    blocks = []
+    bspecs = []
+    for i in range(cfg.n_blocks):
+        kb = jax.random.split(ks[2 + i], 6)
+        hd = d // cfg.n_heads
+        blk = {
+            "wq": layers.dense_init(kb[0], (d, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+            "wk": layers.dense_init(kb[1], (d, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+            "wv": layers.dense_init(kb[2], (d, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+            "wo": layers.dense_init(kb[3], (cfg.n_heads, hd, d), ("heads", "head_dim", "embed")),
+            "ln1": layers.ones_init((d,), ("embed",)),
+            "ln1b": layers.zeros_init((d,), ("embed",)),
+            "ffn_w1": layers.dense_init(kb[4], (d, 4 * d), ("embed", "mlp")),
+            "ffn_w2": layers.dense_init(kb[5], (4 * d, d), ("mlp", "embed")),
+            "ln2": layers.ones_init((d,), ("embed",)),
+            "ln2b": layers.zeros_init((d,), ("embed",)),
+        }
+        p, s = layers.split_tree(blk)
+        blocks.append(p)
+        bspecs.append(s)
+    params["blocks"] = blocks
+    specs["blocks"] = bspecs
+    mlp_dims = (d * (cfg.seq_len + 1),) + tuple(cfg.mlp_dims) + (1,)
+    mkeys = jax.random.split(ks[9], len(mlp_dims))
+    for i, (din, dout) in enumerate(zip(mlp_dims[:-1], mlp_dims[1:])):
+        params[f"mlp{i}_w"], specs[f"mlp{i}_w"] = layers.dense_init(
+            mkeys[i], (din, dout), ("mlp_in", "mlp_out")
+        )
+        params[f"mlp{i}_b"], specs[f"mlp{i}_b"] = layers.zeros_init((dout,), ("mlp_out",))
+    return params, specs
+
+
+def _block(blk, x):
+    b, l, d = x.shape
+    q = jnp.einsum("bld,dhk->blhk", x, blk["wq"])
+    k = jnp.einsum("bld,dhk->blhk", x, blk["wk"])
+    v = jnp.einsum("bld,dhk->blhk", x, blk["wv"])
+    o = layers.attention_ref(q, k, v, causal=False)
+    x = layers.layernorm(x + jnp.einsum("blhk,hkd->bld", o, blk["wo"]), blk["ln1"], blk["ln1b"])
+    h = jax.nn.leaky_relu(x @ blk["ffn_w1"]) @ blk["ffn_w2"]
+    return layers.layernorm(x + h, blk["ln2"], blk["ln2b"])
+
+
+def forward(params, history: jax.Array, target: jax.Array, cfg: RecSysConfig):
+    """history (B, L) item ids, target (B,) item id -> (B,) logit."""
+    seq = jnp.concatenate([history, target[:, None]], axis=1)      # (B, L+1)
+    x = jnp.take(params["item_emb"], seq, axis=0) + params["pos_emb"][None]
+    for blk in params["blocks"]:
+        x = _block(blk, x)
+    flat = x.reshape(x.shape[0], -1)
+    n_mlp = len(cfg.mlp_dims) + 1
+    for i in range(n_mlp):
+        flat = flat @ params[f"mlp{i}_w"] + params[f"mlp{i}_b"]
+        if i < n_mlp - 1:
+            flat = jax.nn.leaky_relu(flat)
+    return flat[:, 0]
+
+
+def bce_loss(params, history, target, labels, cfg: RecSysConfig):
+    logits = forward(params, history, target, cfg)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def score_candidates(params, history: jax.Array, cand: jax.Array, cfg: RecSysConfig):
+    """ADACUR bulk scorer: history (B, L) x cand (B, K) -> (B, K) scores —
+    one joint transformer pass per (user, item) pair, like a CE."""
+    b, k = cand.shape
+    hist_r = jnp.repeat(history, k, axis=0)
+    return forward(params, hist_r, cand.reshape(-1), cfg).reshape(b, k)

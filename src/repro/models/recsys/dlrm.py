@@ -1,0 +1,91 @@
+"""DLRM (MLPerf config): bottom MLP -> embedding lookups -> dot interaction
+-> top MLP  [arXiv:1906.00091].
+
+The (dense-features, sparse-ids) pair is a joint scorer: the dot-interaction
+mixes query-side and item-side features non-factorizably, making DLRM a
+cross-encoder-class model for ADACUR (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ...configs.base import RecSysConfig
+from .. import layers
+from . import embedding
+
+
+def _mlp_init(key, dims, prefix, dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    params = {}
+    specs = {}
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"{prefix}{i}_w"], specs[f"{prefix}{i}_w"] = layers.dense_init(
+            keys[i], (din, dout), ("mlp_in", "mlp_out"), dtype=dtype
+        )
+        params[f"{prefix}{i}_b"], specs[f"{prefix}{i}_b"] = layers.zeros_init(
+            (dout,), ("mlp_out",), dtype=dtype
+        )
+    return params, specs
+
+
+def _mlp_apply(params, prefix, x, n, final_act=False):
+    for i in range(n):
+        x = x @ params[f"{prefix}{i}_w"] + params[f"{prefix}{i}_b"]
+        if i < n - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_dlrm(key, cfg: RecSysConfig):
+    kb, kt, ke = jax.random.split(key, 3)
+    params: Dict = {}
+    specs: Dict = {}
+    params["bot"], specs["bot"] = _mlp_init(kb, cfg.bot_mlp, "b")
+    n_int = cfg.n_sparse + 1
+    d_inter = n_int * (n_int - 1) // 2 + cfg.bot_mlp[-1]
+    top_dims = (d_inter,) + tuple(cfg.top_mlp[1:])
+    params["top"], specs["top"] = _mlp_init(kt, top_dims, "t")
+    params["tables"], specs["tables"] = embedding.init_tables(
+        ke, cfg.table_sizes, cfg.embed_dim
+    )
+    return params, specs
+
+
+def forward(params, dense: jax.Array, sparse_ids: jax.Array, cfg: RecSysConfig):
+    """dense (B, 13) float, sparse_ids (B, 26) int -> (B,) logit."""
+    bot = _mlp_apply(params["bot"], "b", dense, len(cfg.bot_mlp) - 1, final_act=True)
+    emb = embedding.lookup_all_tables(params["tables"], sparse_ids)   # (B, F, D)
+    feats = jnp.concatenate([bot[:, None, :], emb], axis=1)            # (B, F+1, D)
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)                   # (B, F+1, F+1)
+    n = feats.shape[1]
+    iu, ju = jnp.triu_indices(n, k=1)
+    flat = inter[:, iu, ju]                                            # (B, n(n-1)/2)
+    x = jnp.concatenate([bot, flat], axis=1)
+    return _mlp_apply(params["top"], "t", x, len(cfg.top_mlp) - 1)[:, 0]
+
+
+def bce_loss(params, dense, sparse_ids, labels, cfg: RecSysConfig):
+    logits = forward(params, dense, sparse_ids, cfg)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def score_candidates(params, dense: jax.Array, sparse_ids: jax.Array,
+                     cand_sparse: jax.Array, cfg: RecSysConfig):
+    """ADACUR bulk scorer: one query context vs K candidate items.
+
+    The candidate item occupies sparse field 0 (the 'item id' table in the
+    MLPerf layout); the query context supplies dense + remaining fields.
+
+    dense (B, 13); sparse_ids (B, 26); cand_sparse (B, K) -> (B, K).
+    """
+    b, k = cand_sparse.shape
+    dense_r = jnp.repeat(dense, k, axis=0)
+    sparse_r = jnp.repeat(sparse_ids, k, axis=0)
+    sparse_r = sparse_r.at[:, 0].set(cand_sparse.reshape(-1))
+    return forward(params, dense_r, sparse_r, cfg).reshape(b, k)

@@ -1,0 +1,139 @@
+"""MIND: Multi-Interest Network with Dynamic routing  [arXiv:1904.08030].
+
+Capsule (B2I dynamic routing) user encoder producing n_interests interest
+vectors; item score = max_j <v_j, e_item>.  This is a dual-encoder: all-item
+scores are a handful of GEMMs, so the model serves as the FIRST-ROUND anchor
+retriever for ADACUR (the paper's DE_BASE role) rather than as a CE target.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...configs.base import RecSysConfig
+from .. import layers
+
+
+def init_mind(key, cfg: RecSysConfig):
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 4)
+    params = {}
+    specs = {}
+    n_rows = (cfg.n_items + 511) // 512 * 512   # pad to shardable multiple
+    params["item_emb"], specs["item_emb"] = layers.dense_init(
+        ks[0], (n_rows, d), ("table_rows", "embed"), scale=0.05
+    )
+    params["bilinear"], specs["bilinear"] = layers.dense_init(
+        ks[1], (d, d), ("embed", "embed_out")
+    )
+    # fixed (non-trainable in paper; trainable here) routing logit init
+    params["b_init"], specs["b_init"] = layers.dense_init(
+        ks[2], (cfg.n_interests, cfg.seq_len), ("interest", "seq"), scale=1.0
+    )
+    params["proj"], specs["proj"] = layers.dense_init(
+        ks[3], (d, d), ("embed", "embed_out")
+    )
+    return params, specs
+
+
+def _squash(z):
+    n2 = jnp.sum(z * z, axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * z / jnp.sqrt(n2 + 1e-9)
+
+
+def interest_vectors(params, history: jax.Array, cfg: RecSysConfig,
+                     batch_spec=None):
+    """B2I dynamic routing: history (B, L) -> (B, K, d) interest capsules."""
+    e = jnp.take(params["item_emb"], history, axis=0)       # (B, L, d)
+    if batch_spec is not None:
+        # keep the (B, L, d) behaviour embeddings batch-sharded: the gather
+        # from the row-sharded table otherwise replicates them (x5 buffers
+        # at serve_bulk scale)
+        import jax.sharding as shd
+        e = jax.lax.with_sharding_constraint(
+            e, shd.PartitionSpec(batch_spec, None, None)
+        )
+    u = e @ params["bilinear"]                              # (B, L, d)
+    b_logit = jnp.broadcast_to(
+        params["b_init"][None], (history.shape[0],) + params["b_init"].shape
+    )                                                       # (B, K, L)
+    v = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b_logit, axis=1)                 # over capsules
+        z = jnp.einsum("bkl,bld->bkd", w, u)
+        v = _squash(z)
+        b_logit = b_logit + jnp.einsum("bkd,bld->bkl", v, u)
+    v = jax.nn.relu(v @ params["proj"]) + v
+    return v
+
+
+def score_all_items(params, history: jax.Array, cfg: RecSysConfig):
+    """(B, N) retrieval scores: max over interests of dot products."""
+    v = interest_vectors(params, history, cfg)              # (B, K, d)
+    scores = jnp.einsum("bkd,nd->bkn", v, params["item_emb"]).max(axis=1)
+    pad_mask = jnp.arange(scores.shape[-1]) < cfg.n_items   # hide pad rows
+    return jnp.where(pad_mask, scores, -1e30)
+
+
+def retrieve(params, history: jax.Array, k: int, cfg: RecSysConfig,
+             item_tile: int = 16384, batch_spec=None):
+    """Streaming tiled retrieval with a RUNNING top-k carry.
+
+    At serve_bulk scale (B=262144, N=1M) the naive GEMM+top_k is a 1 TB
+    temp, and even stacked per-tile top-ks are tens of GB — so the item
+    tiles stream through a lax.scan whose carry is just the (B, k) running
+    winners (same schedule as the approx_topk Pallas kernel)."""
+    v = interest_vectors(params, history, cfg, batch_spec)  # (B, K, d)
+    table = params["item_emb"]
+    n_rows = table.shape[0]
+    item_tile = min(item_tile, n_rows)
+    n_tiles = max(1, n_rows // item_tile)
+    tiles = table[: n_tiles * item_tile].reshape(n_tiles, -1, table.shape[1])
+    b = history.shape[0]
+    k = min(k, item_tile)
+
+    def _bconstrain(x):
+        if batch_spec is None:
+            return x
+        import jax.sharding as shd
+        return jax.lax.with_sharding_constraint(
+            x, shd.PartitionSpec(batch_spec, *((None,) * (x.ndim - 1)))
+        )
+
+    def tile_step(carry, t):
+        best_v, best_i = carry
+        tile, offset = t
+        # constrain the (B, tile) scores batch-sharded — the fresh top-k
+        # carry otherwise seeds replicated propagation (a 17 GB/device
+        # buffer at serve_bulk scale)
+        s = _bconstrain(jnp.einsum("bkd,nd->bkn", v, tile).max(axis=1))
+        gid = offset + jnp.arange(s.shape[1])
+        s = jnp.where(gid < cfg.n_items, s, -1e30)          # hide pad rows
+        tv, ti = jax.lax.top_k(s, k)
+        merged_v = jnp.concatenate([best_v, tv], axis=1)
+        merged_i = jnp.concatenate([best_i, offset + ti], axis=1)
+        best_v, pos = jax.lax.top_k(merged_v, k)
+        return (_bconstrain(best_v),
+                _bconstrain(jnp.take_along_axis(merged_i, pos, axis=1))), None
+
+    init = (_bconstrain(jnp.full((b, k), -jnp.inf)),
+            _bconstrain(jnp.zeros((b, k), jnp.int32)))
+    offsets = jnp.arange(n_tiles) * item_tile
+    (best_v, best_i), _ = jax.lax.scan(tile_step, init, (tiles, offsets))
+    return best_v, best_i
+
+
+def sampled_softmax_loss(params, history, target, neg_ids, cfg: RecSysConfig, pow_p: float = 2.0):
+    """Label-aware attention + sampled softmax (paper's training loss)."""
+    v = interest_vectors(params, history, cfg)              # (B, K, d)
+    e_t = jnp.take(params["item_emb"], target, axis=0)      # (B, d)
+    att = jax.nn.softmax(
+        pow_p * jnp.einsum("bkd,bd->bk", v, e_t), axis=-1
+    )
+    u = jnp.einsum("bk,bkd->bd", att, v)                    # (B, d)
+    e_neg = jnp.take(params["item_emb"], neg_ids, axis=0)   # (B, M, d)
+    pos = jnp.einsum("bd,bd->b", u, e_t)
+    neg = jnp.einsum("bd,bmd->bm", u, e_neg)
+    logits = jnp.concatenate([pos[:, None], neg], axis=1)
+    return -jax.nn.log_softmax(logits, axis=-1)[:, 0].mean()

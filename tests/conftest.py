@@ -1,0 +1,25 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the single real CPU device; only
+``launch/dryrun.py`` installs the 512-device placeholder mesh."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def small_domain():
+    """A small synthetic CE domain shared across core tests."""
+    from repro.data.synthetic import make_synthetic_ce
+
+    key = jax.random.PRNGKey(0)
+    ce = make_synthetic_ce(key, n_queries=260, n_items=2000)
+    m = ce.full_matrix(jnp.arange(260))
+    return {
+        "ce": ce,
+        "r_anc": m[:200],
+        "test_q": jnp.arange(200, 260),
+        "exact": m[200:],
+    }

@@ -1,0 +1,104 @@
+"""Unit + property tests for the CUR / pseudo-inverse substrate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.core import cur
+
+
+class TestPinv:
+    def test_pinv_identity(self):
+        a = jnp.eye(5)
+        assert_allclose(np.asarray(cur.pinv(a)), np.eye(5), atol=1e-5)
+
+    def test_pinv_moore_penrose_conditions(self):
+        key = jax.random.PRNGKey(0)
+        a = jax.random.normal(key, (12, 5))
+        p = cur.pinv(a)
+        assert_allclose(np.asarray(a @ p @ a), np.asarray(a), atol=1e-4)
+        assert_allclose(np.asarray(p @ a @ p), np.asarray(p), atol=1e-4)
+
+
+class TestBlockPinvExtend:
+    @pytest.mark.parametrize("m,n,s", [(50, 20, 10), (64, 1, 1), (40, 30, 5), (500, 90, 10)])
+    def test_matches_full_pinv(self, m, n, s):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(m + n + s))
+        a = jax.random.normal(k1, (m, n))
+        b = jax.random.normal(k2, (m, s))
+        p = cur.pinv(a)
+        ext = cur.block_pinv_extend(a, p, b)
+        ref = cur.pinv(jnp.concatenate([a, b], axis=1))
+        assert_allclose(np.asarray(ext), np.asarray(ref), atol=2e-4)
+
+    def test_rank_deficient_new_columns(self):
+        """New columns inside span(A) hit the Greville fallback branch."""
+        k = jax.random.PRNGKey(3)
+        a = jax.random.normal(k, (30, 10))
+        b = a[:, :3] @ jnp.array([[1.0, 0.5, 0.0], [0.0, 1.0, 2.0], [1.0, 0.0, 1.0]])
+        p = cur.pinv(a)
+        ext = cur.block_pinv_extend(a, p, b)
+        m_full = jnp.concatenate([a, b], axis=1)
+        # Moore-Penrose condition M M+ M = M still holds for the blended update
+        assert_allclose(np.asarray(m_full @ ext @ m_full), np.asarray(m_full), atol=1e-3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(20, 80),
+        n=st.integers(1, 15),
+        s=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_incremental_equals_full(self, m, n, s, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        a = jax.random.normal(k1, (m, n))
+        b = jax.random.normal(k2, (m, s))
+        ext = cur.block_pinv_extend(a, cur.pinv(a), b)
+        ref = cur.pinv(jnp.concatenate([a, b], axis=1))
+        assert_allclose(np.asarray(ext), np.asarray(ref), atol=5e-4)
+
+
+class TestApproxScores:
+    def test_interpolative_on_anchors(self, small_domain):
+        """CUR reconstruction is (near-)exact on the anchor columns themselves
+        — the paper's Fig. 7 observation that anchor items have ~zero error."""
+        r_anc = small_domain["r_anc"]
+        exact = small_domain["exact"]
+        key = jax.random.PRNGKey(1)
+        anchor = jax.random.choice(key, r_anc.shape[1], (4, 64), replace=False)
+        c_test = jnp.take_along_axis(exact[:4], anchor, axis=1)
+        s_hat = cur.approx_scores(r_anc, c_test, anchor)
+        on_anchor = jnp.take_along_axis(s_hat, anchor, axis=1)
+        err = jnp.abs(on_anchor - c_test).max()
+        assert float(err) < 0.15  # rcond-regularized, not exactly interpolative
+
+    def test_low_rank_matrix_exact(self):
+        """For an exactly low-rank matrix with enough anchors, CUR is exact."""
+        key = jax.random.PRNGKey(0)
+        k1, k2 = jax.random.split(key)
+        u = jax.random.normal(k1, (60, 8))
+        v = jax.random.normal(k2, (8, 500))
+        m = u @ v                               # rank 8
+        r_anc, test_rows = m[:50], m[50:]
+        anchor = jnp.tile(jnp.arange(0, 400, 20)[None, :], (10, 1))  # 20 anchors
+        c_test = jnp.take_along_axis(test_rows, anchor, axis=1)
+        # rcond must sit above float32 noise: the rank-8 matrix's singular
+        # values 9..20 are numerical noise (~1e-7 relative) that an overly
+        # small rcond would invert into garbage.
+        s_hat = cur.approx_scores(r_anc, c_test, anchor, rcond=1e-5)
+        assert_allclose(np.asarray(s_hat), np.asarray(test_rows), rtol=1e-3, atol=1e-3)
+
+    def test_query_embedding_factoring_matches(self, small_domain):
+        """e_q = C_test @ U then e_q @ R_anc  ==  C_test @ U @ R_anc."""
+        r_anc = small_domain["r_anc"]
+        exact = small_domain["exact"]
+        anchor = jnp.tile(jnp.arange(0, 2000, 40)[None, :], (6, 1))
+        c_test = jnp.take_along_axis(exact[:6], anchor, axis=1)
+        direct = cur.approx_scores(r_anc, c_test, anchor)
+        cols = cur.gather_anchor_columns(r_anc, anchor)
+        u = cur.pinv(cols, 1e-6)
+        two_gemm = jnp.einsum("bk,bkq,qn->bn", c_test, u, r_anc)
+        assert_allclose(np.asarray(direct), np.asarray(two_gemm), rtol=2e-3, atol=2e-3)

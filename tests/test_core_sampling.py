@@ -1,0 +1,94 @@
+"""Tests for anchor sampling strategies (Algorithm 3 + §3.2 oracles)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sampling
+
+
+def _no_dups(idx):
+    idx = np.asarray(idx)
+    return all(len(np.unique(row)) == len(row) for row in idx)
+
+
+class TestStrategies:
+    def test_topk_picks_highest_unselected(self):
+        scores = jnp.array([[5.0, 4.0, 3.0, 2.0, 1.0]])
+        selected = jnp.array([[True, False, False, False, False]])
+        idx = sampling.sample_topk(scores, selected, 2)
+        assert set(np.asarray(idx[0]).tolist()) == {1, 2}
+
+    def test_softmax_no_replacement_and_mask(self):
+        key = jax.random.PRNGKey(0)
+        scores = jax.random.normal(key, (8, 100))
+        selected = jnp.zeros((8, 100), dtype=bool).at[:, :10].set(True)
+        idx = sampling.sample_softmax(key, scores, selected, 20)
+        assert _no_dups(idx)
+        assert np.asarray(idx).min() >= 10
+
+    def test_softmax_distribution(self):
+        """Gumbel-top-1 frequencies match softmax probabilities."""
+        key = jax.random.PRNGKey(1)
+        logits = jnp.array([2.0, 1.0, 0.0, -1.0])
+        scores = jnp.tile(logits[None, :], (4000, 1))
+        selected = jnp.zeros_like(scores, dtype=bool)
+        idx = sampling.sample_softmax(key, scores, selected, 1)
+        freq = np.bincount(np.asarray(idx).ravel(), minlength=4) / 4000
+        probs = np.asarray(jax.nn.softmax(logits))
+        np.testing.assert_allclose(freq, probs, atol=0.03)
+
+    def test_random_uniform_over_unselected(self):
+        key = jax.random.PRNGKey(2)
+        selected = jnp.zeros((2000, 10), dtype=bool).at[:, 0].set(True)
+        idx = sampling.sample_random(key, selected, 3)
+        flat = np.asarray(idx).ravel()
+        assert flat.min() >= 1 and _no_dups(idx)
+        freq = np.bincount(flat, minlength=10)[1:] / flat.size
+        np.testing.assert_allclose(freq, np.full(9, 1 / 9), atol=0.02)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(16, 256),
+        k=st.integers(1, 15),
+        n_sel=st.integers(0, 10),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_all_strategies_respect_mask(self, n, k, n_sel, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        scores = jax.random.normal(k1, (3, n))
+        sel_idx = jax.random.choice(k2, n, (n_sel,), replace=False) if n_sel else jnp.array([], dtype=jnp.int32)
+        selected = jnp.zeros((3, n), dtype=bool).at[:, sel_idx].set(True)
+        k_eff = min(k, n - n_sel)
+        for strat in ("topk", "softmax", "random"):
+            idx = sampling.sample(strat, key, scores, selected, k_eff)
+            chosen_mask = np.asarray(jnp.take_along_axis(selected, idx, axis=1))
+            assert not chosen_mask.any(), strat
+            assert _no_dups(idx), strat
+
+
+class TestOracles:
+    def test_oracle_topk_masks_top_km(self):
+        key = jax.random.PRNGKey(0)
+        scores = jnp.tile(jnp.arange(50, dtype=jnp.float32)[None, ::-1], (2, 1))
+        idx = sampling.oracle_topk(key, scores, k_i=10, k_m=5, eps=0.0)
+        assert np.asarray(idx).min() >= 5  # items ranked 0-4 masked out
+
+    def test_oracle_eps_fraction_random(self):
+        key = jax.random.PRNGKey(0)
+        scores = jnp.tile(jnp.arange(200, dtype=jnp.float32)[None, ::-1], (4, 1))
+        idx = sampling.oracle_topk(key, scores, k_i=40, k_m=0, eps=0.5)
+        greedy = np.asarray(idx[:, :20])
+        assert (greedy < 20).all()          # greedy half = true top-20
+        assert _no_dups(idx)
+
+    @pytest.mark.parametrize("eps", [0.0, 0.25, 0.75])
+    def test_oracle_softmax_sizes(self, eps):
+        key = jax.random.PRNGKey(1)
+        scores = jax.random.normal(key, (3, 300))
+        idx = sampling.oracle_softmax(key, scores, k_i=40, k_m=10, eps=eps)
+        assert idx.shape == (3, 40)
+        assert _no_dups(idx)

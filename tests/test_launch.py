@@ -1,0 +1,97 @@
+"""Launcher-layer tests: step builders compile on a 1x1 mesh for every
+cell family, sharding rules resolve sensibly, roofline parsing works."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.distributed import sharding
+from repro.launch import roofline
+from repro.launch.dryrun import collective_bytes
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+class TestShardingRules:
+    def test_basic_translation(self, mesh11):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        spec = sharding.spec_for(mesh, ("embed", "heads", "head_dim"), (64, 4, 16))
+        assert spec == P("data", "model")
+
+    def test_divisibility_fallback(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        # kv_heads=3 does not divide model=1? it does; use a fake big mesh via
+        # axis sizes on the 1-device mesh: model=1 always divides -> sharded
+        spec = sharding.spec_for(mesh, ("kv_heads", "head_dim"), (3, 16))
+        assert spec == P("model")
+
+    def test_no_duplicate_mesh_axis(self, mesh11):
+        # (expert, embed, mlp): expert takes model, mlp must NOT reuse it
+        spec = sharding.spec_for(mesh11, ("expert", "embed", "mlp"), (4, 8, 16))
+        assert spec == P("model", "data")
+
+    def test_batch_axes(self, mesh11):
+        assert sharding.batch_axes(mesh11) == ("data",)
+        mesh3 = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+        assert sharding.batch_axes(mesh3) == ("pod", "data")
+
+
+class TestCollectiveParser:
+    def test_parses_shapes_and_kinds(self):
+        hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(%x), replica_groups={{0,1}}
+  %ar.1 = f32[256]{0} all-reduce(%y), to_apply=%add
+  %cp = f32[4,4]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %not_a_collective = f32[9] add(%a, %b)
+"""
+        out = collective_bytes(hlo)
+        assert out["all-gather"]["bytes"] == 8 * 128 * 2
+        assert out["all-reduce"]["bytes"] == 256 * 4
+        assert out["collective-permute"]["count"] == 1
+        assert "add" not in out
+
+    def test_roofline_terms(self):
+        rec = {
+            "cell": "x:y", "mesh": "16x16", "n_chips": 256,
+            "cost": {"flops": 1e12, "bytes accessed": 1e9},
+            "collectives": {"all-reduce": {"count": 1, "bytes": 5e8}},
+            "model_flops": 2.56e15,   # 1e13/chip > hlo 1e12 -> analytic wins
+            "memory": {"temp_size_in_bytes": 123},
+        }
+        r = roofline.analyze_record(rec)
+        assert r.t_compute_model == pytest.approx(1e13 / 197e12)
+        assert r.t_memory == pytest.approx(1e9 / 819e9)
+        assert r.t_collective == pytest.approx(2 * 5e8 / 50e9)
+        assert r.bottleneck == "compute"
+
+
+@pytest.mark.parametrize(
+    "arch,shape",
+    [
+        ("granite-moe-1b-a400m", "train_4k"),
+        ("qwen3-8b", "decode_32k"),
+        ("nequip", "molecule"),
+        ("bst", "retrieval_cand"),
+        ("mind", "serve_p99"),
+        ("dlrm-mlperf", "serve_p99"),
+    ],
+)
+def test_cell_builders_construct(arch, shape, mesh11):
+    """Every family's builder produces a coherent StepBundle on a tiny mesh
+    (full lowering is exercised by launch/dryrun.py with 512 devices)."""
+    from repro.launch import steps
+
+    bundle = steps.build_cell(arch, shape, mesh11)
+    assert bundle.name == f"{arch}:{shape}"
+    assert bundle.model_flops > 0
+    flat_args = jax.tree.leaves(bundle.abstract_args)
+    flat_shardings = jax.tree.leaves(
+        bundle.in_shardings, is_leaf=lambda x: hasattr(x, "spec")
+    )
+    assert len(flat_args) > 0 and len(flat_shardings) > 0

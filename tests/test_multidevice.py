@@ -1,0 +1,24 @@
+"""Multi-device integration test: spawns a subprocess with 8 forced host
+devices (jax locks the device count at init) and asserts all distributed
+execution paths match their single-device references numerically — see
+tests/multidevice_check.py for the checks."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(600)
+def test_multidevice_equivalences():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "tests", "multidevice_check.py")],
+        env=env, capture_output=True, text=True, timeout=560,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL MULTIDEVICE CHECKS PASSED" in proc.stdout

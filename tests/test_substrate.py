@@ -1,0 +1,356 @@
+"""Substrate tests: checkpointing (atomic/async/elastic/recovery), data
+pipeline (determinism/resume/prefetch), fault tolerance, optimizer, MoE
+dispatch correctness, gnn equivariance properties."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, Checkpointer
+from repro.configs.base import MoEConfig
+from repro.configs import registry
+from repro.data.loader import Prefetcher, ShardedBatcher
+from repro.distributed import compression, fault_tolerance
+from repro.models import moe as moe_lib
+from repro.models.gnn import nequip, sampler
+from repro.training import optimizer
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpoint:
+    def _state(self, key=0):
+        k = jax.random.PRNGKey(key)
+        return {
+            "w": jax.random.normal(k, (8, 4)),
+            "nested": {"b": jnp.arange(5, dtype=jnp.float32)},
+            "stack": [jnp.ones((2, 2)), jnp.zeros((3,))],
+        }
+
+    def test_roundtrip(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_save=False)
+        state = self._state()
+        ck.save(7, state)
+        out = ck.restore(7, state)
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+            state, out,
+        )
+
+    def test_async_save_then_wait(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_save=True)
+        state = self._state()
+        ck.save(1, state)
+        ck.wait()
+        assert ck.available_steps() == [1]
+
+    def test_atomic_no_tmp_left(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_save=False)
+        ck.save(3, self._state())
+        assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+    def test_manager_keep_policy(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), save_every=1, keep=2, async_save=False)
+        state = self._state()
+        for s in range(1, 6):
+            mgr.maybe_save(s, state)
+        assert mgr.ckpt.available_steps() == [4, 5]
+
+    def test_resume_cold_and_warm(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), save_every=1, keep=3, async_save=False)
+        state = self._state()
+        step, out = mgr.resume(state)
+        assert step == 0
+        mgr.maybe_save(2, jax.tree.map(lambda x: x + 1, state))
+        step, out = mgr.resume(state)
+        assert step == 2
+        np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(state["w"]) + 1)
+
+    def test_run_with_recovery_simulated_node_failure(self, tmp_path):
+        """A step that dies mid-run resumes from the last checkpoint and the
+        final state matches an uninterrupted run exactly."""
+        mgr = CheckpointManager(str(tmp_path), save_every=1, keep=5, async_save=False)
+        crashed = {"done": False}
+
+        def step_fn(step, state):
+            if step == 3 and not crashed["done"]:
+                crashed["done"] = True
+                raise RuntimeError("host 17 vanished")
+            return jax.tree.map(lambda x: x + 1.0, state)
+
+        state0 = {"x": jnp.zeros(3)}
+        out = mgr.run_with_recovery(step_fn, state0, n_steps=5)
+        np.testing.assert_allclose(np.asarray(out["x"]), np.full(3, 5.0))
+
+    def test_elastic_restore_respecs(self, tmp_path):
+        """State saved with specs restores onto a (1,1) mesh (elastic down)."""
+        from jax.sharding import PartitionSpec as P
+
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        ck = Checkpointer(str(tmp_path), async_save=False)
+        state = self._state()
+        specs = {
+            "w": P("data", "model"),
+            "nested": {"b": P()},
+            "stack": [P(None, "model"), P()],
+        }
+        ck.save(1, state, specs)
+        out = ck.restore(1, state, mesh=mesh)
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(state["w"]))
+        # restored leaf carries a NamedSharding on the new mesh
+        assert out["w"].sharding.mesh.shape == {"data": 1, "model": 1}
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+class TestLoader:
+    def test_deterministic_and_disjoint_across_hosts(self):
+        b0 = ShardedBatcher(1000, 64, seed=1, host_id=0, n_hosts=4)
+        b1 = ShardedBatcher(1000, 64, seed=1, host_id=1, n_hosts=4)
+        i0a, i0b = b0.batch_indices(5), b0.batch_indices(5)
+        np.testing.assert_array_equal(i0a, i0b)          # deterministic
+        assert not set(i0a.tolist()) & set(b1.batch_indices(5).tolist())
+
+    def test_resume_mid_epoch(self):
+        b = ShardedBatcher(1000, 50, seed=3)
+        ref = [b.batch_indices(s) for s in range(30)]
+        again = [b.batch_indices(s) for s in range(30)]
+        for a, c in zip(ref, again):
+            np.testing.assert_array_equal(a, c)
+
+    def test_epoch_reshuffles(self):
+        b = ShardedBatcher(100, 50, seed=0)
+        assert not np.array_equal(b.epoch_order(0), b.epoch_order(1))
+
+    def test_prefetcher_streams_in_order(self):
+        pf = Prefetcher(lambda step: step * 10, depth=3, start_step=2)
+        got = [next(pf) for _ in range(4)]
+        pf.close()
+        assert got == [(2, 20), (3, 30), (4, 40), (5, 50)]
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+class TestFaultTolerance:
+    def test_watchdog_flags_persistent_straggler(self):
+        fired = []
+        wd = fault_tolerance.StragglerWatchdog(
+            threshold=2.0, patience=2, on_straggler=fired.append
+        )
+        for s in range(10):
+            wd.observe(s, 1.0)
+        wd.observe(10, 5.0)
+        wd.observe(11, 5.0)
+        assert fired and fired[0].straggler
+
+    def test_watchdog_ignores_single_blip(self):
+        fired = []
+        wd = fault_tolerance.StragglerWatchdog(patience=2, on_straggler=fired.append)
+        for s in range(10):
+            wd.observe(s, 1.0)
+        wd.observe(10, 9.0)
+        wd.observe(11, 1.0)
+        assert not fired
+
+    def test_heartbeat_dead_hosts(self):
+        hb = fault_tolerance.HeartbeatMonitor(timeout=10.0)
+        hb.beat("a", now=0.0)
+        hb.beat("b", now=5.0)
+        assert hb.dead_hosts(now=12.0) == ["a"]
+        assert hb.healthy_count(now=12.0) == 1
+
+    def test_elastic_plan_picks_largest_fit(self):
+        assert fault_tolerance.elastic_plan(512) == (2, 16, 16)
+        assert fault_tolerance.elastic_plan(300) == (16, 16)
+        assert fault_tolerance.elastic_plan(100) == (8, 8)
+        assert fault_tolerance.elastic_plan(1) == (1, 1)
+
+
+# ---------------------------------------------------------------------------
+# optimizer + compression
+# ---------------------------------------------------------------------------
+
+
+class TestOptimizer:
+    def test_adamw_decreases_quadratic(self):
+        cfg = optimizer.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=100)
+        params = {"x": jnp.array([5.0, -3.0])}
+        opt = optimizer.init_adamw(params)
+        loss = lambda p: jnp.sum(p["x"] ** 2)
+        for _ in range(50):
+            grads = jax.grad(loss)(params)
+            params, opt, _ = optimizer.adamw_update(cfg, params, grads, opt)
+        assert float(loss(params)) < 1.0
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full(4, 10.0)}
+        clipped, norm = optimizer.clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(20.0)
+        assert float(optimizer.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_grad_accumulation_matches_full_batch(self):
+        params = {"w": jnp.array([[1.0, 2.0], [3.0, 4.0]])}
+        data = jax.random.normal(jax.random.PRNGKey(0), (8, 2))
+
+        def loss_fn(p, x):
+            return jnp.mean((x @ p["w"]) ** 2)
+
+        full = jax.grad(lambda p: loss_fn(p, data))(params)
+        micro = data.reshape(4, 2, 2)
+        acc, _ = optimizer.accumulate_grads(loss_fn, params, micro, 4)
+        np.testing.assert_allclose(np.asarray(acc["w"]), np.asarray(full["w"]), rtol=1e-5)
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = optimizer.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+        assert float(optimizer.cosine_schedule(cfg, jnp.int32(5))) == pytest.approx(0.5)
+        assert float(optimizer.cosine_schedule(cfg, jnp.int32(100))) == pytest.approx(0.1, abs=1e-6)
+
+
+class TestCompression:
+    def test_int8_roundtrip_error_feedback_converges(self):
+        """With error feedback the accumulated compressed sum tracks the true
+        sum (compression error does not accumulate)."""
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64,))}
+        err = compression.init_error_feedback(g)
+        total_true = jnp.zeros(64)
+        total_comp = jnp.zeros(64)
+        for _ in range(20):
+            deq, err = compression.int8_roundtrip_with_feedback(g, err)
+            total_true += g["w"]
+            total_comp += deq["w"]
+        rel = float(jnp.abs(total_comp - total_true).max() / jnp.abs(total_true).max())
+        assert rel < 0.02
+
+    def test_topk_sparsify_keeps_largest(self):
+        g = {"w": jnp.arange(100, dtype=jnp.float32)}
+        err = compression.init_error_feedback(g)
+        kept, err = compression.topk_sparsify_with_feedback(g, err, frac=0.1)
+        nz = np.asarray(kept["w"]) != 0
+        assert nz.sum() == 10 and nz[-10:].all()
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10000))
+    def test_property_int8_bounded_error(self, seed):
+        g = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * 10
+        q, s = compression.int8_quantize(g)
+        deq = compression.int8_dequantize(q, s)
+        assert float(jnp.abs(deq - g).max()) <= float(s) * 0.5 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch correctness (sort-based capacity dispatch vs dense reference)
+# ---------------------------------------------------------------------------
+
+
+class TestMoE:
+    def _dense_reference(self, params, x, cfg):
+        """Route every token through its top-k experts with no capacity."""
+        logits = x.astype(jnp.float32) @ params["router"]
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, cfg.top_k)
+        top_p = top_p / top_p.sum(-1, keepdims=True)
+        y = jnp.zeros_like(x)
+        for j in range(cfg.top_k):
+            for e in range(cfg.n_experts):
+                m = (top_e[:, j] == e).astype(x.dtype)[:, None]
+                g = jax.nn.silu(x @ params["wg"][e]) * (x @ params["wu"][e])
+                y += m * top_p[:, j : j + 1].astype(x.dtype) * (g @ params["wd"][e])
+        return y
+
+    def test_matches_dense_reference_with_big_capacity(self):
+        from repro.models import layers
+
+        cfg = MoEConfig(n_experts=4, top_k=2, d_expert=16)
+        key = jax.random.PRNGKey(0)
+        params, _ = layers.split_tree(moe_lib.moe_init(key, 8, cfg))
+        x = jax.random.normal(jax.random.PRNGKey(1), (32, 8))
+        y, aux = moe_lib.moe_apply_local(params, x, cfg, capacity_factor=4.0)
+        ref = self._dense_reference(params, x, cfg)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+    def test_capacity_drop_is_graceful(self):
+        from repro.models import layers
+
+        cfg = MoEConfig(n_experts=2, top_k=1, d_expert=8)
+        params, _ = layers.split_tree(moe_lib.moe_init(jax.random.PRNGKey(0), 4, cfg))
+        x = jax.random.normal(jax.random.PRNGKey(1), (64, 4))
+        y, _ = moe_lib.moe_apply_local(params, x, cfg, capacity_factor=0.25)
+        assert jnp.isfinite(y).all()
+
+    def test_shared_experts_added(self):
+        from repro.models import layers
+
+        cfg = MoEConfig(n_experts=2, top_k=1, d_expert=8, n_shared_experts=1)
+        params, _ = layers.split_tree(moe_lib.moe_init(jax.random.PRNGKey(0), 4, cfg))
+        x = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
+        y, _ = moe_lib.moe_apply_local(params, x, cfg, capacity_factor=4.0)
+        no_shared = dict(params)
+        no_shared.pop("shared")
+        y2, _ = moe_lib.moe_apply_local(no_shared, x, cfg, capacity_factor=4.0)
+        assert float(jnp.abs(y - y2).max()) > 1e-5
+
+
+# ---------------------------------------------------------------------------
+# GNN equivariance properties + sampler
+# ---------------------------------------------------------------------------
+
+
+class TestNequIPProperties:
+    def _setup(self, seed=0):
+        cfg = registry.smoke_config("nequip")
+        params, _ = nequip.init_nequip(jax.random.PRNGKey(0), cfg)
+        k = jax.random.PRNGKey(seed)
+        pos = jax.random.normal(k, (16, 3)) * 2
+        sp = jax.random.randint(k, (16,), 0, cfg.n_species)
+        s = jax.random.randint(jax.random.PRNGKey(seed + 1), (50,), 0, 16)
+        r = jax.random.randint(jax.random.PRNGKey(seed + 2), (50,), 0, 16)
+        return cfg, params, pos, sp, s, r
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 100))
+    def test_property_rotation_invariant_energy(self, seed):
+        cfg, params, pos, sp, s, r = self._setup(seed)
+        q, _ = np.linalg.qr(np.random.default_rng(seed).normal(size=(3, 3)))
+        q = jnp.asarray(q, jnp.float32)
+        e1 = nequip.forward(params, cfg, pos, sp, s, r)
+        e2 = nequip.forward(params, cfg, pos @ q.T, sp, s, r)
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=3e-5, rtol=1e-4)
+
+    def test_translation_invariant(self):
+        cfg, params, pos, sp, s, r = self._setup()
+        e1 = nequip.forward(params, cfg, pos, sp, s, r)
+        e2 = nequip.forward(params, cfg, pos + 7.5, sp, s, r)
+        np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=3e-5, rtol=1e-4)
+
+    def test_forces_rotate_covariantly(self):
+        cfg, params, pos, sp, s, r = self._setup()
+        q, _ = np.linalg.qr(np.random.default_rng(7).normal(size=(3, 3)))
+        q = jnp.asarray(q, jnp.float32)
+        _, f1 = nequip.energy_and_forces(params, cfg, pos, sp, s, r)
+        _, f2 = nequip.energy_and_forces(params, cfg, pos @ q.T, sp, s, r)
+        np.testing.assert_allclose(
+            np.asarray(f1 @ q.T), np.asarray(f2), atol=5e-4, rtol=5e-3
+        )
+
+    def test_sampler_respects_fanout_and_padding(self):
+        sd, rc = sampler.random_graph(2000, 16000, 1)
+        g = sampler.CSRGraph.from_edge_index(sd, rc, 2000)
+        rng = np.random.default_rng(0)
+        sub = sampler.sample_subgraph(g, np.arange(32), (5, 3), 4000, 4000, rng)
+        assert sub.node_mask.sum() <= 4000 and sub.edge_mask.sum() <= 4000
+        assert sub.seed_mask.sum() == 32
+        # edges reference in-range local ids
+        assert sub.senders.max() < 4000 and sub.receivers.max() < 4000
