@@ -1,5 +1,7 @@
 """Paper Fig. 2 / Figs. 9-20: Top-k-Recall vs CE-call budget for ADACUR
-variants, ANNCUR and retrieve-and-rerank baselines, all budget-matched."""
+variants, ANNCUR and retrieve-and-rerank baselines, all budget-matched —
+every method runs as a configuration of the unified Retriever engine
+(``repro.core.engine``)."""
 
 from __future__ import annotations
 
@@ -7,7 +9,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AdaCURConfig
-from repro.core import adacur, anncur, retrieval
+from repro.core import anncur, retrieval
+from repro.core.engine import AdaCURRetriever, ANNCURRetriever, RerankRetriever
 
 from .common import Domain, emit, make_domain, timed
 
@@ -23,58 +26,54 @@ def _de_candidates(dom: Domain, noise: float = 1.5, key=jax.random.PRNGKey(9)):
     return order
 
 
-def run(dom: Domain | None = None, quiet: bool = False):
+def run(dom: Domain | None = None, quiet: bool = False, fused: bool = False):
     dom = dom or make_domain()
     score_fn = dom.ce.score_fn()
     de_order = _de_candidates(dom)
+    key = jax.random.PRNGKey(1)
     rows = []
     for budget in BUDGETS:
         k_anchor = budget // 2
+        base = dict(k_anchor=k_anchor, n_rounds=5, budget_ce=budget,
+                    k_retrieve=100, loop_mode="fori", use_fused_topk=fused)
         methods = {}
 
-        cfg = AdaCURConfig(k_anchor=k_anchor, n_rounds=5, budget_ce=budget,
-                           strategy="topk", k_retrieve=100)
-        res, us = timed(
-            lambda: adacur.adacur_search(score_fn, dom.r_anc, dom.test_q, cfg,
-                                         jax.random.PRNGKey(1)))
-        methods["adacur_topk"] = (res, us)
+        ret = AdaCURRetriever(score_fn, dom.r_anc,
+                              AdaCURConfig(strategy="topk", **base))
+        methods["adacur_topk"] = timed(lambda: ret.search(dom.test_q, key), warmup=1)
 
-        cfg_s = AdaCURConfig(k_anchor=k_anchor, n_rounds=5, budget_ce=budget,
-                             strategy="softmax", k_retrieve=100)
-        res, us = timed(
-            lambda: adacur.adacur_search(score_fn, dom.r_anc, dom.test_q, cfg_s,
-                                         jax.random.PRNGKey(1)))
-        methods["adacur_softmax"] = (res, us)
+        ret_s = AdaCURRetriever(score_fn, dom.r_anc,
+                                AdaCURConfig(strategy="softmax", **base))
+        methods["adacur_softmax"] = timed(lambda: ret_s.search(dom.test_q, key), warmup=1)
 
-        cfg_ns = AdaCURConfig(k_anchor=budget, n_rounds=5, budget_ce=budget,
-                              strategy="topk", split_budget=False, k_retrieve=100)
-        res, us = timed(
-            lambda: adacur.adacur_search(score_fn, dom.r_anc, dom.test_q, cfg_ns,
-                                         jax.random.PRNGKey(1)))
-        methods["adacur_topk_nosplit"] = (res, us)
+        ns = dict(base, k_anchor=budget, split_budget=False)
+        ret_ns = AdaCURRetriever(score_fn, dom.r_anc,
+                                 AdaCURConfig(strategy="topk", **ns))
+        methods["adacur_topk_nosplit"] = timed(lambda: ret_ns.search(dom.test_q, key), warmup=1)
 
         # ADACUR seeded by the DE retriever (paper's ADACUR_{DE_BASE+TopK})
         first = de_order[:, : budget // 5]
-        cfg_de = AdaCURConfig(k_anchor=budget, n_rounds=5, budget_ce=budget,
-                              strategy="topk", split_budget=False,
-                              first_round="retriever", k_retrieve=100)
-        res, us = timed(
-            lambda: adacur.adacur_search(score_fn, dom.r_anc, dom.test_q, cfg_de,
-                                         jax.random.PRNGKey(1), first_anchors=first))
-        methods["adacur_de_topk_nosplit"] = (res, us)
+        ret_de = AdaCURRetriever(
+            score_fn, dom.r_anc,
+            AdaCURConfig(strategy="topk", first_round="retriever", **ns),
+        )
+        methods["adacur_de_topk_nosplit"] = timed(
+            lambda: ret_de.search(dom.test_q, key, first_anchors=first), warmup=1
+        )
 
         idx = anncur.build_index(dom.r_anc, k_anchor, key=jax.random.PRNGKey(2))
-        res, us = timed(lambda: anncur.search(score_fn, idx, dom.test_q, budget, 100))
-        methods["anncur"] = (res, us)
+        ret_a = ANNCURRetriever(score_fn, dom.r_anc, idx.anchor_idx, budget, 100)
+        methods["anncur"] = timed(lambda: ret_a.search(dom.test_q), warmup=1)
 
-        idx_de = anncur.build_index(
-            dom.r_anc, k_anchor, anchor_idx=de_order[0, :k_anchor])
-        res, us = timed(lambda: anncur.search(score_fn, idx_de, dom.test_q, budget, 100))
-        methods["anncur_de"] = (res, us)
+        ret_ade = ANNCURRetriever(
+            score_fn, dom.r_anc, de_order[0, :k_anchor], budget, 100
+        )
+        methods["anncur_de"] = timed(lambda: ret_ade.search(dom.test_q), warmup=1)
 
-        res, us = timed(
-            lambda: retrieval.rerank_baseline(score_fn, de_order, dom.test_q, budget, 100))
-        methods["de_rerank"] = (res, us)
+        ret_rr = RerankRetriever(score_fn, dom.r_anc, budget, 100)
+        methods["de_rerank"] = timed(
+            lambda: ret_rr.search(dom.test_q, candidate_idx=de_order), warmup=1
+        )
 
         for name, (res, us) in methods.items():
             rep = retrieval.evaluate_result(name, res, dom.exact, ks=KS)

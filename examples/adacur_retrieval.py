@@ -1,5 +1,6 @@
 """Budget-sweep study (paper Fig. 2 shape): recall vs CE-call budget for
-every method, on a paper-scale synthetic domain (10K items, 500 anchors).
+every method — all expressed as Retriever-engine configurations — on a
+paper-scale synthetic domain (10K items, 500 anchors).
 
     PYTHONPATH=src python examples/adacur_retrieval.py
 """

@@ -4,13 +4,15 @@
 
 Builds a 10K-item domain, indexes 500 anchor queries offline, then runs
 budget-matched retrieval with the paper's method and the fixed-anchor
-baseline and prints Top-k-Recall."""
+baseline — both as configurations of the unified Retriever engine — and
+prints Top-k-Recall."""
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AdaCURConfig
-from repro.core import adacur, anncur, retrieval
+from repro.core import anncur, retrieval
+from repro.core.engine import AdaCURRetriever, ANNCURRetriever
 from repro.data.synthetic import make_synthetic_ce
 
 
@@ -25,12 +27,15 @@ def main():
     print(f"\nCE-call budget per query: {budget}  (brute force would need 10,000)\n")
 
     cfg = AdaCURConfig(k_anchor=100, n_rounds=5, budget_ce=budget,
-                       strategy="topk", k_retrieve=100)
-    res = adacur.adacur_search(score_fn, r_anc, test_q, cfg, jax.random.PRNGKey(1))
+                       strategy="topk", k_retrieve=100, loop_mode="fori",
+                       use_fused_topk=True)
+    ret = AdaCURRetriever(score_fn, r_anc, cfg)
+    res = ret.search(test_q, jax.random.PRNGKey(1))
     rep = retrieval.evaluate_result("ADACUR(TopK,5 rounds)", res, exact)
 
     idx = anncur.build_index(r_anc, 100, key=jax.random.PRNGKey(2))
-    res2 = anncur.search(score_fn, idx, test_q, budget, 100)
+    ret2 = ANNCURRetriever(score_fn, r_anc, idx.anchor_idx, budget, 100)
+    res2 = ret2.search(test_q)
     rep2 = retrieval.evaluate_result("ANNCUR(random anchors)", res2, exact)
 
     print(f"{'method':<28} {'R@1':>6} {'R@10':>6} {'R@100':>6}")

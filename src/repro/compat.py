@@ -1,0 +1,25 @@
+"""JAX version-compatibility shims.
+
+The codebase targets current JAX (``jax.shard_map`` with ``check_vma``);
+hermetic containers pin older 0.4.x where the API lives at
+``jax.experimental.shard_map.shard_map`` and the replication check is
+spelled ``check_rep``.  Route every call through here so call sites stay
+written against the modern API.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # jax < 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    kw = {} if check_vma is None else {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

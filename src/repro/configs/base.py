@@ -230,6 +230,23 @@ class AdaCURConfig:
     round_epsilon: float = 0.0
     incremental_pinv: bool = True    # beyond-paper: O(k_q k_i k_s) updates
     distributed_gather: bool = False # one-hot-matmul column gather (pod meshes)
+    # --- static-shape round engine (core/engine.py) ------------------------
+    # "unrolled": python loop over rounds, one trace per (cfg, shapes) — the
+    #   seed behavior, works with any (even non-traceable) score_fn.
+    # "fori": shape-invariant round body under lax.fori_loop/while_loop; the
+    #   round count becomes a *runtime* operand, so changing n_rounds per
+    #   call (adaptive round counts, arXiv 2405.03651) does not retrace.
+    loop_mode: str = "unrolled"      # "unrolled" | "fori"
+    # Route per-round anchor sampling and the final rerank-candidate
+    # selection through the fused Pallas score->top-k kernel so the (B, N)
+    # approximate score matrix is never materialized in HBM.
+    use_fused_topk: bool = False
+    fused_tile: int = 6144           # item-axis tile of the fused kernel
+    fused_interpret: bool = True     # interpret-mode Pallas (CPU); False on TPU
+    # Anytime ADACUR (fori mode only): stop early once the round-over-round
+    # provisional top-k_retrieve candidate set overlap reaches 1 - tol.
+    # 0.0 always runs the full round budget.
+    early_exit_tol: float = 0.0
     # Regularized pinv: adaptively-selected anchors are correlated, so the
     # anchor column matrix conditions much worse than a random subset
     # (measured ~13500 vs ~210); truncating tiny singular values keeps the
@@ -243,6 +260,10 @@ class AdaCURConfig:
             )
         if self.split_budget and self.budget_ce < self.k_anchor:
             raise ValueError("budget_ce must cover k_anchor when splitting budget")
+        if self.loop_mode not in ("unrolled", "fori"):
+            raise ValueError(f"unknown loop_mode '{self.loop_mode}'")
+        if self.early_exit_tol > 0.0 and self.loop_mode != "fori":
+            raise ValueError("early_exit_tol requires loop_mode='fori'")
 
 
 def replace(cfg, **kw):

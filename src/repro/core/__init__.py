@@ -2,12 +2,21 @@
 
 - ``cur``       CUR decomposition, pseudo-inverse (full + incremental)
 - ``sampling``  anchor sampling strategies (TopK/SoftMax/Random + oracles)
-- ``adacur``    Algorithm 1: batched multi-round adaptive anchor selection
+- ``adacur``    Algorithm 1 reference implementation (growing shapes)
+- ``engine``    static-shape round engine + unified Retriever API (hot path)
 - ``anncur``    fixed-anchor baseline (Yadav et al. 2022)
 - ``retrieval`` budget-matched retrieve-and-rerank + recall metrics
 - ``index``     offline R_anc builder (resumable, shardable)
 """
 
-from . import adacur, anncur, cur, index, retrieval, sampling  # noqa: F401
+from . import adacur, anncur, cur, engine, index, retrieval, sampling  # noqa: F401
 from .adacur import AdaCURResult, adacur_search, make_jitted_search  # noqa: F401
 from .anncur import ANNCURIndex, build_index  # noqa: F401
+from .engine import (  # noqa: F401
+    AdaCURRetriever,
+    ANNCURRetriever,
+    RerankRetriever,
+    Retriever,
+    engine_search,
+    make_engine,
+)

@@ -1,5 +1,21 @@
-"""ADACUR — the paper's contribution: adaptive multi-round anchor selection
-for CUR-based k-NN search with cross-encoders (Algorithm 1).
+"""ADACUR reference implementation — Algorithm 1 as an executable spec.
+
+This module is the *faithful, growing-shape* transcription of the paper's
+adaptive multi-round anchor selection for CUR-based k-NN search with
+cross-encoders.  It is one of two layers:
+
+- **this file** (``core/adacur.py``): buffers grow by ``jnp.concatenate``
+  every round, so each round body has its own trace shape.  Simple to read
+  and audit against the paper's pseudo-code; works with any score_fn
+  (including non-traceable numpy-backed scorers); used by the tests as the
+  parity oracle.
+- **the engine** (``core/engine.py``): the production hot path.  Identical
+  math over *preallocated* static-shape slabs filled with
+  ``lax.dynamic_update_slice``, so the round body is shape-invariant and can
+  run unrolled, under ``lax.fori_loop`` with a runtime round count, or with
+  an early-exit tolerance — plus fused Pallas score->top-k sampling that
+  never materializes the (B, N) approximate score matrix.  New call sites
+  should use the engine's ``Retriever`` API (``AdaCURRetriever`` et al.).
 
 Differences from the paper's single-query pseudo-code, all behaviour-
 preserving (validated in tests/benchmarks against the faithful path):
@@ -34,7 +50,10 @@ ScoreFn = Callable[..., jax.Array]
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("anchor_idx", "anchor_scores", "approx_scores", "topk_idx", "topk_scores"),
+    data_fields=(
+        "anchor_idx", "anchor_scores", "approx_scores", "topk_idx",
+        "topk_scores", "rounds_done",
+    ),
     meta_fields=("ce_calls",),
 )
 @dataclass
@@ -43,10 +62,13 @@ class AdaCURResult:
 
     anchor_idx: jax.Array        # (B, k_i)   anchor item ids, in sampling order
     anchor_scores: jax.Array     # (B, k_i)   exact CE scores of the anchors
-    approx_scores: jax.Array     # (B, N)     Ŝ after the final round
+    approx_scores: jax.Array     # (B, N)     Ŝ after the final round (engine:
+                                 #            None when not materialized)
     topk_idx: jax.Array          # (B, k)     retrieved item ids (exact-CE ranked)
     topk_scores: jax.Array       # (B, k)     their exact CE scores
-    ce_calls: int                # total exact CE calls per query
+    ce_calls: int                # total exact CE calls per query (upper bound
+                                 #            under the engine's early exit)
+    rounds_done: Optional[jax.Array] = None  # () int32 rounds executed (engine)
 
 
 def _approx_from_state(e_q: jax.Array, r_anc: jax.Array) -> jax.Array:

@@ -94,6 +94,32 @@ def approx_scores(
 # ---------------------------------------------------------------------------
 
 
+def _bordered_blocks(
+    a: jax.Array, p: jax.Array, b: jax.Array, ridge: float
+) -> tuple:
+    """Shared core of the bordering update: (D, K) for M = [A | B].
+
+    D = P @ B, C = B - A @ D, and K is pinv(C) blended with the Greville
+    fallback ``K = (I + DᵀD)⁻¹ Dᵀ P`` per-column when the residual C is
+    (numerically) rank-deficient — new columns inside span(A)."""
+    d = p @ b                                      # (n, s)
+    c = b - a @ d                                  # (m, s)
+    # full-column-rank branch: K1 = (CᵀC + ridge I)⁻¹ Cᵀ
+    gram = c.T @ c
+    s = gram.shape[-1]
+    eye = jnp.eye(s, dtype=gram.dtype)
+    scale = jnp.trace(gram) / s + 1.0
+    k1 = jnp.linalg.solve(gram + ridge * scale * eye, c.T)
+    # rank-deficient branch: K2 = (I + DᵀD)⁻¹ Dᵀ P
+    k2 = jnp.linalg.solve(eye + d.T @ d, d.T @ p)
+    # per-column blend: column j uses branch 1 iff ‖c_j‖² is non-negligible
+    # relative to ‖b_j‖².
+    c_norm = jnp.sum(c * c, axis=0)
+    b_norm = jnp.sum(b * b, axis=0) + 1e-30
+    w = (c_norm > 1e-10 * b_norm).astype(k1.dtype)[:, None]
+    return d, w * k1 + (1.0 - w) * k2
+
+
 def block_pinv_extend(
     a: jax.Array,
     p: jax.Array,
@@ -119,24 +145,31 @@ def block_pinv_extend(
     the full-column-rank branch is the hot path; the ridge keeps the small
     (s,s) solves well-posed.
     """
-    d = p @ b                                      # (n, s)
-    c = b - a @ d                                  # (m, s)
-    # full-column-rank branch: K1 = (CᵀC + ridge I)⁻¹ Cᵀ
-    gram = c.T @ c
-    s = gram.shape[-1]
-    eye = jnp.eye(s, dtype=gram.dtype)
-    scale = jnp.trace(gram) / s + 1.0
-    k1 = jnp.linalg.solve(gram + ridge * scale * eye, c.T)
-    # rank-deficient branch: K2 = (I + DᵀD)⁻¹ Dᵀ P
-    k2 = jnp.linalg.solve(eye + d.T @ d, d.T @ p)
-    # per-column blend: column j uses branch 1 iff ‖c_j‖² is non-negligible
-    # relative to ‖b_j‖².
-    c_norm = jnp.sum(c * c, axis=0)
-    b_norm = jnp.sum(b * b, axis=0) + 1e-30
-    w = (c_norm > 1e-10 * b_norm).astype(k1.dtype)[:, None]
-    k = w * k1 + (1.0 - w) * k2
+    d, k = _bordered_blocks(a, p, b, ridge)
     top = p - d @ k
     return jnp.concatenate([top, k], axis=0)
+
+
+def block_pinv_extend_static(
+    a_full: jax.Array,
+    p_full: jax.Array,
+    b: jax.Array,
+    start,
+    ridge: float = 1e-8,
+) -> jax.Array:
+    """Shape-invariant bordering update over *preallocated* buffers.
+
+    ``a_full`` (m, K) holds the anchor columns filled so far in columns
+    [0, start) with exact zeros beyond; ``p_full`` (K, m) holds their pinv in
+    rows [0, start) with exact zeros beyond.  The new block ``b`` (m, s) is
+    incorporated by writing its K-rows into [start, start+s) — the same math
+    as :func:`block_pinv_extend` (the zero padding contributes exact zeros to
+    every contraction), but with static shapes so the multi-round engine's
+    loop body is trace-invariant and ``start`` may be a traced index.
+    """
+    d, k = _bordered_blocks(a_full, p_full, b, ridge)
+    top = p_full - d @ k        # rows >= start stay exactly zero (p, d zero)
+    return jax.lax.dynamic_update_slice(top, k, (start, 0))
 
 
 def incremental_pinv_init(a0: jax.Array, rcond: float = 1e-6) -> jax.Array:

@@ -24,6 +24,7 @@ from typing import Callable, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
+from ..compat import shard_map
 
 
 def pipeline_forward(
@@ -77,7 +78,7 @@ def pipeline_forward(
         out = jax.lax.psum(out, pipe_axis) / 1.0  # ranks != last wrote zeros
         return out.reshape(x_local.shape)
 
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(P(pipe_axis), P()),

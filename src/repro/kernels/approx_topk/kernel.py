@@ -11,13 +11,24 @@ with a per-tile top-k so scores never leave VMEM:
 
   grid = (n_item_tiles,); each step:
     scores = e_q @ R_anc[:, tile]                 (MXU, (B, T))
-    mask   = tile_ids ∈ anchor set (fused Alg. 3 line 8)
+    scores += noise[:, tile]                      (optional Gumbel input —
+                                                   SoftMax sampling w/o
+                                                   replacement, Kool 2019)
+    mask   = tile_ids ∈ anchor set (fused Alg. 3 line 8) ∧ tile_ids < n_valid
+             [∨ mask[:, tile] when a dense bool mask is passed instead]
     per-tile top-k via k iterations of (max, argmax, suppress)
   outputs: (B, n_tiles, k) values + global indices.
 
 The tiny (B, n_tiles·k) cross-tile merge happens in ops.py with one
 jax.lax.top_k — n_tiles·k ≪ N, so the HBM round-trip shrinks by ~T/k
 (e.g. 512/64 = 8x) and the GEMM output never hits HBM at all.
+
+Masking comes in two flavors: an anchor-id list (B, A) compared per tile
+(A ≪ N ids stay resident in VMEM — the right trade on TPU), or a dense
+(B, N) bool mask streamed tile-by-tile (O(B·T) per tile — the right trade
+for the CPU scan emulation in ops.py, and for engines that already maintain
+the ``selected`` mask).  ``n_valid`` suppresses padded item ids >= n_valid
+when R_anc's item axis is padded to a shardable multiple (pod meshes).
 """
 
 from __future__ import annotations
@@ -32,29 +43,49 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def pad_to_tile(tile: int, r_anc, noise=None, mask=None):
+    """Zero-pad the item axis to a tile multiple (shared by both backends)."""
+    n = r_anc.shape[1]
+    n_pad = pl.cdiv(n, tile) * tile
+    if n_pad != n:
+        pad = ((0, 0), (0, n_pad - n))
+        r_anc = jnp.pad(r_anc, pad)
+        noise = jnp.pad(noise, pad) if noise is not None else None
+        mask = jnp.pad(mask, pad) if mask is not None else None
+    return r_anc, noise, mask, n_pad
+
+
 def _approx_topk_kernel(
     e_q_ref,        # (B, k_q)
     r_anc_ref,      # (k_q, T)
     anchors_ref,    # (B, A) int32 — already-selected anchor ids (global)
-    vals_ref,       # (B, 1, k) out
-    idx_ref,        # (B, 1, k) out int32
-    *,
+    *rest,          # [noise_ref (B,T)] [mask_ref (B,T)] vals_ref, idx_ref
     tile: int,
     k: int,
     n_items: int,
+    has_noise: bool,
+    has_mask: bool,
 ):
+    it = iter(rest)
+    noise_ref = next(it) if has_noise else None
+    mask_ref = next(it) if has_mask else None
+    vals_ref, idx_ref = next(it), next(it)
     ti = pl.program_id(0)
     e_q = e_q_ref[...].astype(jnp.float32)                 # (B, k_q)
     r = r_anc_ref[...].astype(jnp.float32)                 # (k_q, T)
     scores = jax.lax.dot_general(
         e_q, r, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )                                                       # (B, T)
+    if noise_ref is not None:
+        scores = scores + noise_ref[...].astype(jnp.float32)
     b = scores.shape[0]
     gids = ti * tile + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
     valid = gids < n_items
     # fused anchor masking (Alg. 3 line 8): suppress already-selected items
     anchors = anchors_ref[...]                              # (B, A)
     hit = (gids[:, :, None] == anchors[:, None, :]).any(axis=2)
+    if mask_ref is not None:
+        hit = hit | mask_ref[...]
     scores = jnp.where(valid & ~hit, scores, NEG_INF)
 
     def take_max(i, carry):
@@ -83,25 +114,34 @@ def approx_topk_tiles(
     *,
     tile: int = 512,
     interpret: bool = False,
+    noise: jax.Array | None = None,   # (B, N) additive noise (Gumbel sampling)
+    mask: jax.Array | None = None,    # (B, N) bool — True = suppress
+    n_valid: int | None = None,       # real item count when N is padded
 ):
     """Returns per-tile (vals (B, n_tiles, k), idx (B, n_tiles, k))."""
     b, k_q = e_q.shape
     _, n = r_anc.shape
-    n_pad = pl.cdiv(n, tile) * tile
-    if n_pad != n:
-        r_anc = jnp.pad(r_anc, ((0, 0), (0, n_pad - n)))
+    r_anc, noise, mask, n_pad = pad_to_tile(tile, r_anc, noise, mask)
     n_tiles = n_pad // tile
     kernel = functools.partial(
-        _approx_topk_kernel, tile=tile, k=k, n_items=n
+        _approx_topk_kernel, tile=tile, k=k,
+        n_items=n if n_valid is None else min(n_valid, n),
+        has_noise=noise is not None, has_mask=mask is not None,
     )
+    in_specs = [
+        pl.BlockSpec((b, k_q), lambda ti: (0, 0)),
+        pl.BlockSpec((k_q, tile), lambda ti: (0, ti)),
+        pl.BlockSpec(anchors.shape, lambda ti: (0, 0)),
+    ]
+    inputs = [e_q, r_anc, anchors]
+    for extra in (noise, mask):
+        if extra is not None:
+            in_specs.append(pl.BlockSpec((b, tile), lambda ti: (0, ti)))
+            inputs.append(extra)
     vals, idx = pl.pallas_call(
         kernel,
         grid=(n_tiles,),
-        in_specs=[
-            pl.BlockSpec((b, k_q), lambda ti: (0, 0)),
-            pl.BlockSpec((k_q, tile), lambda ti: (0, ti)),
-            pl.BlockSpec(anchors.shape, lambda ti: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((b, 1, k), lambda ti: (0, ti, 0)),
             pl.BlockSpec((b, 1, k), lambda ti: (0, ti, 0)),
@@ -111,5 +151,5 @@ def approx_topk_tiles(
             jax.ShapeDtypeStruct((b, n_tiles, k), jnp.int32),
         ],
         interpret=interpret,
-    )(e_q, r_anc, anchors)
+    )(*inputs)
     return vals, idx

@@ -13,11 +13,20 @@ def approx_topk_reference(
     r_anc: jax.Array,     # (k_q, N)
     anchors: jax.Array,   # (B, A) global ids to mask (-1 = unused)
     k: int,
+    noise: jax.Array | None = None,   # (B, N) additive noise
+    mask: jax.Array | None = None,    # (B, N) bool — True = suppress
+    n_valid: int | None = None,       # real item count when N is padded
 ):
     scores = e_q.astype(jnp.float32) @ r_anc.astype(jnp.float32)   # (B, N)
+    if noise is not None:
+        scores = scores + noise.astype(jnp.float32)
     n = scores.shape[1]
     ids = jnp.arange(n)
     hit = (ids[None, :, None] == anchors[:, None, :]).any(axis=2)
+    if mask is not None:
+        hit = hit | mask
+    if n_valid is not None:
+        hit = hit | (ids >= n_valid)[None, :]
     scores = jnp.where(hit, NEG_INF, scores)
     vals, idx = jax.lax.top_k(scores, k)
     return vals, idx.astype(jnp.int32)

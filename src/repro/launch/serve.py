@@ -3,13 +3,16 @@
 The production serving loop the paper's technique plugs into:
 
 - an offline ``R_anc`` index (built by repro.core.index, checkpointed);
-- a scorer backend (tiny trained CE transformer, synthetic CE, or any
-  recsys joint scorer) behind the common score_fn interface;
-- request batching: queries accumulate to a batch (or a deadline) and run
-  one jit'd multi-round ADACUR search together;
+- any :class:`repro.core.engine.Retriever` behind the unified search API —
+  the default is :class:`AdaCURRetriever` on the static-shape round engine
+  (``loop_mode='fori'``), so per-batch round-count overrides do not retrace;
+- request batching: queries accumulate to a batch or a deadline.  Batches
+  fire from ``submit`` when full/overdue AND from ``poll`` — an idle queue
+  with one straggler request is flushed by the event loop's periodic
+  ``poll`` even if no further request ever arrives;
 - per-request k-NN results with exact CE scores.
 
-CLI:  PYTHONPATH=src python -m repro.launch.serve --arch ce-tiny --requests 64
+CLI:  PYTHONPATH=src python -m repro.launch.serve --requests 64
 """
 
 from __future__ import annotations
@@ -24,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import AdaCURConfig
-from ..core import adacur
+from ..core.engine import AdaCURRetriever, Retriever
 
 
 @dataclass
@@ -43,35 +46,48 @@ class RetrievalResponse:
 
 
 class AdaCURService:
-    """Batched ADACUR retrieval over a fixed item corpus."""
+    """Batched retrieval over a fixed item corpus via any Retriever."""
 
     def __init__(
         self,
-        score_fn: Callable,
-        r_anc: jax.Array,
-        cfg: AdaCURConfig,
+        score_fn: Optional[Callable] = None,
+        r_anc: Optional[jax.Array] = None,
+        cfg: Optional[AdaCURConfig] = None,
         max_batch: int = 32,
         max_wait_s: float = 0.01,
         seed: int = 0,
+        retriever: Optional[Retriever] = None,
     ):
-        self.cfg = cfg
-        self.r_anc = r_anc
+        if retriever is None:
+            if score_fn is None or r_anc is None or cfg is None:
+                raise ValueError("need (score_fn, r_anc, cfg) or a retriever")
+            retriever = AdaCURRetriever(score_fn, r_anc, cfg)
+        self.retriever = retriever
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self._key = jax.random.PRNGKey(seed)
-        self._search = adacur.make_jitted_search(score_fn, cfg)
         self._pending: List[RetrievalRequest] = []
+
+    def _due(self) -> bool:
+        if not self._pending:
+            return False
+        oldest = self._pending[0].arrival_t
+        return (
+            len(self._pending) >= self.max_batch
+            or time.monotonic() - oldest >= self.max_wait_s
+        )
 
     def submit(self, req: RetrievalRequest) -> Optional[List[RetrievalResponse]]:
         """Queue a request; returns responses when a batch fires."""
         self._pending.append(req)
-        oldest = self._pending[0].arrival_t
-        if (
-            len(self._pending) >= self.max_batch
-            or time.monotonic() - oldest >= self.max_wait_s
-        ):
-            return self.flush()
-        return None
+        return self.flush() if self._due() else None
+
+    def poll(self) -> List[RetrievalResponse]:
+        """Deadline check for stragglers: flush if the oldest queued request
+        has waited past ``max_wait_s``.  Call from the serving event loop —
+        without this, a lone queued request was only served when *another*
+        request happened to arrive."""
+        return self.flush() if self._due() else []
 
     def flush(self) -> List[RetrievalResponse]:
         if not self._pending:
@@ -79,10 +95,8 @@ class AdaCURService:
         batch, self._pending = self._pending[: self.max_batch], self._pending[self.max_batch :]
         qids = jnp.asarray([r.query_id for r in batch])
         self._key, sub = jax.random.split(self._key)
-        t0 = time.monotonic()
-        res = self._search(self.r_anc, qids, sub)
+        res = self.retriever.search(qids, sub)
         res = jax.block_until_ready(res)
-        dt = time.monotonic() - t0
         out = []
         for i, r in enumerate(batch):
             out.append(
@@ -104,6 +118,8 @@ def main() -> None:
     ap.add_argument("--budget", type=int, default=200)
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--fused", action="store_true",
+                    help="fused Pallas score->top-k sampling")
     args = ap.parse_args()
 
     from ..data.synthetic import make_synthetic_ce
@@ -114,25 +130,21 @@ def main() -> None:
 
     cfg = AdaCURConfig(
         k_anchor=args.budget // 2, n_rounds=args.rounds, budget_ce=args.budget,
-        strategy="topk", k_retrieve=100,
+        strategy="topk", k_retrieve=100, loop_mode="fori",
+        use_fused_topk=args.fused,
     )
     svc = AdaCURService(ce.score_fn(), r_anc, cfg, max_batch=args.batch)
 
-    lat = []
-    done = 0
+    served = []
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         qid = int(rng.integers(500, 600))
-        resp = svc.submit(RetrievalRequest(query_id=qid))
-        if resp:
-            done += len(resp)
-            lat += [r.latency_s for r in resp]
-    for r in svc.flush():
-        done += 1
-        lat.append(r.latency_s)
-    lat = np.array(lat)
+        served += svc.submit(RetrievalRequest(query_id=qid)) or []
+        served += svc.poll()   # the event loop's deadline sweep
+    served += svc.flush()
+    lat = np.array([r.latency_s for r in served])
     print(
-        f"served {done} requests | p50={np.percentile(lat, 50)*1e3:.1f}ms "
+        f"served {len(served)} requests | p50={np.percentile(lat, 50)*1e3:.1f}ms "
         f"p99={np.percentile(lat, 99)*1e3:.1f}ms | "
         f"{cfg.budget_ce} CE calls/request (vs {args.n_items} brute force = "
         f"{args.n_items / cfg.budget_ce:.0f}x fewer)"

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from ...configs.base import GNNConfig
 from .. import layers
+from ...compat import shard_map
 
 # tensor-product paths computed in each interaction block
 _PATHS = (
@@ -233,7 +234,7 @@ def make_sharded_interact(mesh, node_axis: str = "data",
             "t": P(node_axis, ch, None, None),
         }
         lp_spec = jax.tree.map(lambda _: P(), lp)
-        return jax.shard_map(
+        return shard_map(
             body,
             mesh=mesh,
             in_specs=(lp_spec, f_specs, e_spec, e_spec, P(node_axis, None),

@@ -1,0 +1,76 @@
+"""Deterministic stand-in for the tiny hypothesis subset the tests use.
+
+The real ``hypothesis`` is declared in requirements.txt and is used when
+installed.  Hermetic environments without it (the kernel-toolchain
+container) import this module instead, so property tests still *collect and
+run* — each ``@given`` test executes ``max_examples`` deterministic draws
+seeded from the test's qualified name, rather than being skipped.
+
+Only the strategies the suite actually uses are implemented:
+``st.integers``, ``st.sampled_from``, ``st.booleans``, ``st.floats``.
+No shrinking, no database — failures report the drawn kwargs verbatim.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def settings(max_examples: int = 10, **_kw):
+    """Records max_examples on the wrapped test (deadline etc. ignored)."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            n = getattr(wrapper, "_fallback_max_examples", 10)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = {name: s.draw(rng) for name, s in strategies.items()}
+                fn(*args, **drawn, **kw)
+
+        # hide the strategy-bound parameters from pytest's fixture
+        # resolution (it introspects the signature of collected tests)
+        sig = inspect.signature(fn)
+        keep = [p for name, p in sig.parameters.items() if name not in strategies]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+
+    return deco

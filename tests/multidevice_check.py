@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import MoEConfig
 from repro.configs import registry
 from repro.distributed import decode_attention, pipeline
@@ -156,7 +157,7 @@ def check_cross_pod_reduce():
             g = {"w": gp["w"][0]}          # this pod's partial
             out, new_e = cross_pod_body(g, e)
             return out, new_e
-        return jax.shard_map(
+        return shard_map(
             body, mesh=mesh,
             in_specs=({"w": P("pod", "data", "model")}, {"w": P("data", "model")}),
             out_specs=({"w": P("data", "model")}, {"w": P("data", "model")}),

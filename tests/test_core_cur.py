@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # hermetic container: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 from numpy.testing import assert_allclose
 
 from repro.core import cur
@@ -47,7 +50,10 @@ class TestBlockPinvExtend:
 
     @settings(max_examples=20, deadline=None)
     @given(
-        m=st.integers(20, 80),
+        # the bordering update is specified for TALL anchor matrices
+        # (k_q anchor queries >> k_i anchor items, see cur.block_pinv_extend):
+        # keep m >= n + s so [A | B] never goes wide
+        m=st.integers(24, 80),
         n=st.integers(1, 15),
         s=st.integers(1, 8),
         seed=st.integers(0, 2**31 - 1),

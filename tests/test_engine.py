@@ -1,0 +1,323 @@
+"""Static-shape round engine: parity with the seed (growing-shape) search,
+no-retrace round-count overrides, early exit, fused-kernel sampling, the
+unified Retriever API, and the static incremental-pinv update."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AdaCURConfig, replace
+from repro.core import adacur, anncur, cur, engine, retrieval
+from repro.core.engine import (
+    AdaCURRetriever,
+    ANNCURRetriever,
+    RerankRetriever,
+    Retriever,
+)
+
+
+def _overlap(a, b):
+    """Mean fraction of ids in `a` also present in the same row of `b`."""
+    hits = (np.asarray(a)[:, :, None] == np.asarray(b)[:, None, :]).any(-1)
+    return float(hits.mean())
+
+
+def _seed_search(dom, cfg, key=3, first=None, n_valid=None, r_anc=None):
+    return adacur.adacur_search(
+        dom["ce"].score_fn(), dom["r_anc"] if r_anc is None else r_anc,
+        dom["test_q"], cfg, jax.random.PRNGKey(key), first_anchors=first,
+        n_valid_items=n_valid,
+    )
+
+
+def _engine_search(dom, cfg, key=3, first=None, n_valid=None, r_anc=None, **kw):
+    return engine.engine_search(
+        dom["ce"].score_fn(), dom["r_anc"] if r_anc is None else r_anc,
+        dom["test_q"], cfg, jax.random.PRNGKey(key), first_anchors=first,
+        n_valid_items=n_valid, **kw,
+    )
+
+
+BASE = dict(k_anchor=40, n_rounds=4, budget_ce=80, k_retrieve=30)
+
+
+class TestSeedParity:
+    """Engine variants retrieve the seed search's top-k (same RNG stream)."""
+
+    def test_unrolled_dense_is_exact(self, small_domain):
+        cfg = AdaCURConfig(**BASE)
+        ref = _seed_search(small_domain, cfg)
+        res = _engine_search(small_domain, cfg)
+        np.testing.assert_array_equal(
+            np.asarray(res.anchor_idx), np.asarray(ref.anchor_idx)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.topk_idx), np.asarray(ref.topk_idx)
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.approx_scores), np.asarray(ref.approx_scores),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    @pytest.mark.parametrize("loop_mode", ["unrolled", "fori"])
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_mode_matrix(self, small_domain, loop_mode, fused):
+        cfg = AdaCURConfig(**BASE)
+        ref = _seed_search(small_domain, cfg)
+        res = _engine_search(
+            small_domain,
+            replace(cfg, loop_mode=loop_mode, use_fused_topk=fused, fused_tile=256),
+        )
+        assert _overlap(res.topk_idx, ref.topk_idx) >= 0.99
+
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_softmax_strategy(self, small_domain, fused):
+        cfg = AdaCURConfig(strategy="softmax", **BASE)
+        ref = _seed_search(small_domain, cfg)
+        res = _engine_search(
+            small_domain,
+            replace(cfg, loop_mode="fori", use_fused_topk=fused, fused_tile=256),
+        )
+        # identical keys -> identical Gumbel draws -> identical trajectories
+        assert _overlap(res.topk_idx, ref.topk_idx) >= 0.97
+
+    def test_no_split_budget(self, small_domain):
+        cfg = AdaCURConfig(
+            k_anchor=40, n_rounds=4, budget_ce=80, split_budget=False,
+            k_retrieve=30, loop_mode="fori", use_fused_topk=True, fused_tile=256,
+        )
+        ref = _seed_search(small_domain, replace(cfg, loop_mode="unrolled",
+                                                 use_fused_topk=False))
+        res = _engine_search(small_domain, cfg)
+        assert res.anchor_idx.shape == (60, 80)  # k_i = budget
+        assert res.ce_calls == 80
+        assert _overlap(res.topk_idx, ref.topk_idx) >= 0.99
+
+    def test_first_anchors(self, small_domain):
+        exact = small_domain["exact"]
+        noisy = exact + 2.0 * jax.random.normal(jax.random.PRNGKey(0), exact.shape)
+        _, first = jax.lax.top_k(noisy, 10)
+        cfg = AdaCURConfig(first_round="retriever", **BASE)
+        ref = _seed_search(small_domain, cfg, first=first)
+        res = _engine_search(
+            small_domain,
+            replace(cfg, loop_mode="fori", use_fused_topk=True, fused_tile=256),
+            first=first,
+        )
+        assert _overlap(res.topk_idx, ref.topk_idx) >= 0.99
+
+    def test_round_epsilon(self, small_domain):
+        cfg = AdaCURConfig(round_epsilon=0.3, **BASE)
+        ref = _seed_search(small_domain, cfg)
+        res = _engine_search(
+            small_domain,
+            replace(cfg, loop_mode="fori", use_fused_topk=True, fused_tile=256),
+        )
+        # same keys drive both the adaptive picks and the ε-random fill
+        assert _overlap(res.topk_idx, ref.topk_idx) >= 0.97
+
+    def test_full_pinv_mode(self, small_domain):
+        cfg = AdaCURConfig(incremental_pinv=False, **BASE)
+        ref = _seed_search(small_domain, cfg)
+        res = _engine_search(small_domain, replace(cfg, loop_mode="fori"))
+        # pinv of the zero-padded buffer == padded pinv; tiny SVD fp noise
+        # may flip near-ties, hence set overlap rather than equality
+        assert _overlap(res.topk_idx, ref.topk_idx) >= 0.95
+
+    @pytest.mark.parametrize("fused", [False, True])
+    def test_n_valid_items_padding(self, small_domain, fused):
+        """Padded item columns carry poison scores; none may be retrieved."""
+        r_anc = small_domain["r_anc"]
+        n = r_anc.shape[1]
+        padded = jnp.concatenate([r_anc, 50.0 * jnp.ones((r_anc.shape[0], 48))], 1)
+        cfg = AdaCURConfig(**BASE)
+        ref = _seed_search(small_domain, cfg, n_valid=n, r_anc=padded)
+        res = _engine_search(
+            small_domain,
+            replace(cfg, loop_mode="fori", use_fused_topk=fused, fused_tile=256),
+            n_valid=n, r_anc=padded,
+        )
+        assert (np.asarray(res.topk_idx) < n).all()
+        assert (np.asarray(res.anchor_idx) < n).all()
+        assert _overlap(res.topk_idx, ref.topk_idx) >= 0.99
+
+
+class TestStaticShapes:
+    def test_fori_no_retrace_on_n_rounds(self, small_domain):
+        """One compiled executable serves every runtime round count."""
+        traces = []
+        score_fn = small_domain["ce"].score_fn()
+
+        def counting_score_fn(q, idx):
+            traces.append(1)   # trace-time side effect: counts (re)traces
+            return score_fn(q, idx)
+
+        cfg = AdaCURConfig(loop_mode="fori", **BASE)
+        run = engine.make_engine(counting_score_fn, cfg)
+        key = jax.random.PRNGKey(3)
+        r2 = run(small_domain["r_anc"], small_domain["test_q"], key, n_rounds=2)
+        n_first = len(traces)
+        assert n_first > 0
+        r4 = run(small_domain["r_anc"], small_domain["test_q"], key, n_rounds=4)
+        r1 = run(small_domain["r_anc"], small_domain["test_q"], key, n_rounds=1)
+        assert len(traces) == n_first, "changing n_rounds retraced the engine"
+        assert int(r2.rounds_done) == 2 and int(r4.rounds_done) == 4
+        assert int(r1.rounds_done) == 1
+        # unexecuted slabs stay empty and are masked out of the ranking
+        filled = (np.asarray(r2.anchor_idx) >= 0).sum(1)
+        assert (filled == 2 * (BASE["k_anchor"] // BASE["n_rounds"])).all()
+        assert (np.asarray(r2.topk_idx) >= 0).all()
+
+    def test_underfilled_ranking_never_leaks_sentinels(self, small_domain):
+        """No-split + runtime n_rounds smaller than k_retrieve's need: the
+        ranking pads by repeating the row-best candidate instead of serving
+        the -1 id / NEG_INF score padding."""
+        cfg = AdaCURConfig(
+            k_anchor=40, n_rounds=4, budget_ce=40, split_budget=False,
+            k_retrieve=30, loop_mode="fori",
+        )
+        run = engine.make_engine(small_domain["ce"].score_fn(), cfg)
+        res = run(small_domain["r_anc"], small_domain["test_q"],
+                  jax.random.PRNGKey(3), n_rounds=1)   # 10 filled < 30 wanted
+        idx = np.asarray(res.topk_idx)
+        scores = np.asarray(res.topk_scores)
+        assert (idx >= 0).all()
+        assert (scores > -1e29).all()
+        ref = jnp.take_along_axis(small_domain["exact"], res.topk_idx, axis=1)
+        np.testing.assert_allclose(scores, np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+    def test_unrolled_rejects_runtime_n_rounds(self, small_domain):
+        cfg = AdaCURConfig(**BASE)
+        with pytest.raises(ValueError):
+            _engine_search(small_domain, cfg, n_rounds=2)
+
+    def test_fused_round_has_no_bn_float_intermediates(self, small_domain):
+        score_fn = small_domain["ce"].score_fn()
+        dense = AdaCURConfig(**BASE)
+        fused = replace(dense, use_fused_topk=True, fused_tile=256)
+        n_dense = engine.round_body_bn_intermediates(
+            score_fn, small_domain["r_anc"], small_domain["test_q"], dense
+        )
+        n_fused = engine.round_body_bn_intermediates(
+            score_fn, small_domain["r_anc"], small_domain["test_q"], fused
+        )
+        assert n_dense >= 1      # dense scores every item each round
+        assert n_fused == 0      # S_hat never materialized
+
+    def test_early_exit_stops_and_reports(self, small_domain):
+        cfg = AdaCURConfig(
+            k_anchor=80, n_rounds=8, budget_ce=120, k_retrieve=30,
+            loop_mode="fori", early_exit_tol=0.5,
+        )
+        res = _engine_search(small_domain, cfg)
+        done = int(res.rounds_done)
+        assert 1 <= done <= 8
+        assert (np.asarray(res.topk_idx) >= 0).all()
+        # exact top-k scores still hold for the returned set
+        ref = jnp.take_along_axis(small_domain["exact"], res.topk_idx, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(res.topk_scores), np.asarray(ref), rtol=1e-5, atol=1e-5
+        )
+
+    def test_early_exit_requires_fori(self):
+        with pytest.raises(ValueError):
+            AdaCURConfig(early_exit_tol=0.1, loop_mode="unrolled", **BASE)
+
+
+class TestRetrieverAPI:
+    def test_protocol(self, small_domain):
+        sf = small_domain["ce"].score_fn()
+        r_anc = small_domain["r_anc"]
+        assert isinstance(AdaCURRetriever(sf, r_anc, AdaCURConfig(**BASE)), Retriever)
+        assert isinstance(RerankRetriever(sf, r_anc, 40, 20), Retriever)
+
+    def test_anncur_as_engine_config(self, small_domain):
+        sf = small_domain["ce"].score_fn()
+        idx = anncur.build_index(small_domain["r_anc"], 30, key=jax.random.PRNGKey(7))
+        ref = anncur.search(sf, idx, small_domain["test_q"], 60, 30)
+        ret = ANNCURRetriever(sf, small_domain["r_anc"], idx.anchor_idx, 60, 30)
+        res = ret.search(small_domain["test_q"])
+        assert _overlap(res.topk_idx, ref.topk_idx) >= 0.99
+
+    def test_rerank_as_engine_config(self, small_domain):
+        sf = small_domain["ce"].score_fn()
+        exact = small_domain["exact"]
+        noisy = exact + 1.5 * jax.random.normal(jax.random.PRNGKey(9), exact.shape)
+        _, order = jax.lax.top_k(noisy, exact.shape[1])
+        ref = retrieval.rerank_baseline(sf, order, small_domain["test_q"], 60, 30)
+        ret = RerankRetriever(sf, small_domain["r_anc"], 60, 30)
+        res = ret.search(small_domain["test_q"], candidate_idx=order)
+        np.testing.assert_array_equal(
+            np.asarray(res.topk_idx), np.asarray(ref.topk_idx)
+        )
+
+    def test_adacur_beats_anncur_via_retrievers(self, small_domain):
+        """The paper's headline ordering survives the engine migration."""
+        sf = small_domain["ce"].score_fn()
+        cfg = AdaCURConfig(
+            k_anchor=50, n_rounds=5, budget_ce=100, k_retrieve=100,
+            loop_mode="fori", use_fused_topk=True, fused_tile=256,
+        )
+        res = AdaCURRetriever(sf, small_domain["r_anc"], cfg).search(
+            small_domain["test_q"], jax.random.PRNGKey(3)
+        )
+        rep = retrieval.evaluate_result("adacur", res, small_domain["exact"])
+        idx = anncur.build_index(small_domain["r_anc"], 50, key=jax.random.PRNGKey(7))
+        res2 = ANNCURRetriever(sf, small_domain["r_anc"], idx.anchor_idx, 100, 100).search(
+            small_domain["test_q"]
+        )
+        rep2 = retrieval.evaluate_result("anncur", res2, small_domain["exact"])
+        assert rep.recall[100] > rep2.recall[100]
+
+
+class TestStaticPinvUpdate:
+    def test_static_extend_matches_growing(self):
+        """The padded-buffer bordering update equals the concatenate one."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        a = jax.random.normal(k1, (50, 12))
+        b = jax.random.normal(k2, (50, 6))
+        p = cur.pinv(a)
+        ref = cur.block_pinv_extend(a, p, b)                    # (18, 50)
+        a_full = jnp.zeros((50, 24)).at[:, :12].set(a)
+        p_full = jnp.zeros((24, 50)).at[:12, :].set(p)
+        ext = cur.block_pinv_extend_static(a_full, p_full, b, 12)
+        np.testing.assert_allclose(
+            np.asarray(ext[:18]), np.asarray(ref), atol=1e-5, rtol=1e-5
+        )
+        np.testing.assert_array_equal(np.asarray(ext[18:]), np.zeros((6, 50)))
+
+    def test_rank_deficient_duplicated_anchor_columns(self):
+        """Duplicated anchor columns make the residual C exactly zero, which
+        must route through the Greville fallback branch — the blended update
+        still satisfies the Moore-Penrose condition M M+ M = M."""
+        a = jax.random.normal(jax.random.PRNGKey(3), (40, 8))
+        b = jnp.concatenate([a[:, 2:3], a[:, 5:6]], axis=1)     # exact dupes
+        p = cur.pinv(a)
+        ext = cur.block_pinv_extend(a, p, b)
+        m = jnp.concatenate([a, b], axis=1)
+        np.testing.assert_allclose(
+            np.asarray(m @ ext @ m), np.asarray(m), atol=1e-3
+        )
+        # the static variant hits the same branch through the padded buffers
+        a_full = jnp.zeros((40, 10)).at[:, :8].set(a)
+        p_full = jnp.zeros((10, 40)).at[:8, :].set(p)
+        ext_s = cur.block_pinv_extend_static(a_full, p_full, b, 8)
+        np.testing.assert_allclose(
+            np.asarray(ext_s), np.asarray(ext), atol=1e-5, rtol=1e-5
+        )
+
+    def test_engine_with_duplicate_prone_first_round(self, small_domain):
+        """A retriever first round of near-duplicate columns exercises the
+        rank-deficient branch inside the engine without blowing up."""
+        b = small_domain["test_q"].shape[0]
+        # anchors 0..4 repeated: later rounds must extend past a singular
+        # first-block pinv and still produce finite, valid retrievals
+        first = jnp.tile(jnp.arange(5)[None, :], (b, 2))        # (B, 10)
+        cfg = AdaCURConfig(
+            k_anchor=40, n_rounds=4, budget_ce=80, k_retrieve=20,
+            first_round="retriever", loop_mode="fori",
+        )
+        res = _engine_search(small_domain, cfg, first=first)
+        assert np.isfinite(np.asarray(res.topk_scores)).all()
+        assert (np.asarray(res.topk_idx) >= 0).all()

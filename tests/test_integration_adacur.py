@@ -130,6 +130,40 @@ class TestRecsysADACUR:
 
 
 class TestServing:
+    def test_straggler_flushed_by_poll_after_deadline(self, small_domain):
+        """Regression: a lone queued request past max_wait_s used to sit
+        until ANOTHER request arrived; poll() must serve it."""
+        import time
+
+        cfg = AdaCURConfig(k_anchor=20, n_rounds=4, budget_ce=40, k_retrieve=20)
+        svc = AdaCURService(
+            small_domain["ce"].score_fn(), small_domain["r_anc"], cfg,
+            max_batch=4, max_wait_s=0.02,
+        )
+        assert svc.submit(RetrievalRequest(query_id=205)) is None
+        assert svc.poll() == []          # deadline not reached yet
+        time.sleep(0.03)
+        out = svc.poll()                 # no second request ever arrives
+        assert len(out) == 1 and out[0].query_id == 205
+        assert out[0].item_ids.shape == (20,)
+        assert svc.poll() == []          # queue drained
+
+    def test_service_accepts_custom_retriever(self, small_domain):
+        from repro.core.engine import AdaCURRetriever
+
+        cfg = AdaCURConfig(
+            k_anchor=20, n_rounds=4, budget_ce=40, k_retrieve=20,
+            loop_mode="fori", use_fused_topk=True, fused_tile=256,
+        )
+        ret = AdaCURRetriever(small_domain["ce"].score_fn(), small_domain["r_anc"], cfg)
+        svc = AdaCURService(retriever=ret, max_batch=2, max_wait_s=10.0)
+        out = []
+        for qid in (201, 202):
+            got = svc.submit(RetrievalRequest(query_id=qid))
+            out += got or []
+        assert len(out) == 2
+        assert all(r.item_ids.shape == (20,) for r in out)
+
     def test_service_batches_and_answers(self, small_domain):
         cfg = AdaCURConfig(k_anchor=20, n_rounds=4, budget_ce=40, k_retrieve=20)
         svc = AdaCURService(

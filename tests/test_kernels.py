@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # hermetic container: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 from numpy.testing import assert_allclose
 
 from repro.kernels.approx_topk.ops import approx_topk_op
@@ -70,21 +73,50 @@ class TestFlashAttention:
 
 
 class TestApproxTopK:
+    @pytest.mark.parametrize("impl", ["pallas", "scan"])
     @pytest.mark.parametrize(
         "b,kq,n,a,k,tile",
         [(4, 64, 2048, 16, 32, 256), (2, 100, 999, 8, 10, 128), (1, 32, 5000, 4, 64, 512)],
     )
-    def test_matches_reference(self, b, kq, n, a, k, tile):
+    def test_matches_reference(self, b, kq, n, a, k, tile, impl):
         ks = jax.random.split(jax.random.PRNGKey(n + k), 3)
         e_q = jax.random.normal(ks[0], (b, kq))
         r = jax.random.normal(ks[1], (kq, n))
         anchors = jax.random.randint(ks[2], (b, a), 0, n)
-        v1, i1 = approx_topk_op(e_q, r, anchors, k, tile=tile, interpret=True)
+        v1, i1 = approx_topk_op(e_q, r, anchors, k, tile=tile, interpret=True, impl=impl)
         v2, i2 = approx_topk_reference(e_q, r, anchors, k)
         assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-4, rtol=1e-4)
         # anchor masking property: no returned id may be a masked anchor
         hits = (np.asarray(i1)[:, :, None] == np.asarray(anchors)[:, None, :]).any()
         assert not hits
+
+    @pytest.mark.parametrize("impl", ["pallas", "scan"])
+    def test_gumbel_noise_input(self, impl):
+        """SoftMax sampling path: scores + Gumbel noise, S_hat never formed."""
+        ks = jax.random.split(jax.random.PRNGKey(5), 4)
+        e_q = jax.random.normal(ks[0], (3, 40))
+        r = jax.random.normal(ks[1], (40, 1200))
+        anchors = jax.random.randint(ks[2], (3, 8), 0, 1200)
+        g = jax.random.gumbel(ks[3], (3, 1200), dtype=jnp.float32)
+        v1, i1 = approx_topk_op(e_q, r, anchors, 16, tile=256, interpret=True,
+                                noise=g, impl=impl)
+        v2, i2 = approx_topk_reference(e_q, r, anchors, 16, noise=g)
+        assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-4, rtol=1e-4)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+    @pytest.mark.parametrize("impl", ["pallas", "scan"])
+    def test_dense_mask_and_n_valid(self, impl):
+        ks = jax.random.split(jax.random.PRNGKey(6), 4)
+        e_q = jax.random.normal(ks[0], (2, 32))
+        r = jax.random.normal(ks[1], (32, 900))
+        anchors = jnp.full((2, 1), -1, jnp.int32)
+        mask = jax.random.bernoulli(ks[2], 0.2, (2, 900))
+        v1, i1 = approx_topk_op(e_q, r, anchors, 12, tile=128, interpret=True,
+                                mask=mask, n_valid=800, impl=impl)
+        v2, i2 = approx_topk_reference(e_q, r, anchors, 12, mask=mask, n_valid=800)
+        assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-4, rtol=1e-4)
+        assert (np.asarray(i1) < 800).all()
+        assert not np.asarray(jnp.take_along_axis(mask, i1, axis=1)).any()
 
     def test_descending_and_unique(self):
         ks = jax.random.split(jax.random.PRNGKey(1), 3)

@@ -8,7 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # hermetic container: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.checkpoint import CheckpointManager, Checkpointer
 from repro.configs.base import MoEConfig
