@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AdaCURConfig
-from repro.core import adacur, anncur, cur
+from repro.core.engine import AdaCURRetriever, ANNCURRetriever
 
 from .common import emit, make_domain, timed
 
@@ -32,8 +32,9 @@ def run(dom=None, quiet: bool = False):
     score_fn = dom.ce.score_fn()
     out = {}
     for k_i in (50, 200):
-        idx = anncur.build_index(dom.r_anc, k_i, key=jax.random.PRNGKey(2))
-        res, us = timed(lambda: anncur.search(score_fn, idx, dom.test_q, k_i, 100))
+        idx = dom.index.with_anchors(k_anchor=k_i, key=jax.random.PRNGKey(2))
+        ret_a = ANNCURRetriever.from_index(idx, score_fn, k_i, 100)
+        res, us = timed(lambda: ret_a.search(dom.test_q))
         bands = _band_errors(dom, res.approx_scores)
         emit(f"approx_error/anncur_k{k_i}", us,
              ";".join(f"{k}={v:.4f}" for k, v in bands.items()))
@@ -41,8 +42,8 @@ def run(dom=None, quiet: bool = False):
 
         cfg = AdaCURConfig(k_anchor=k_i, n_rounds=5, budget_ce=k_i,
                            strategy="topk", split_budget=False, k_retrieve=100)
-        res, us = timed(lambda: adacur.adacur_search(
-            score_fn, dom.r_anc, dom.test_q, cfg, jax.random.PRNGKey(3)))
+        ret = AdaCURRetriever.from_index(dom.index, score_fn, cfg)
+        res, us = timed(lambda: ret.search(dom.test_q, jax.random.PRNGKey(3)))
         bands = _band_errors(dom, res.approx_scores)
         emit(f"approx_error/adacur_k{k_i}", us,
              ";".join(f"{k}={v:.4f}" for k, v in bands.items()))

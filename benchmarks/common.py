@@ -10,6 +10,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.core.index import AnchorIndex
 from repro.data.synthetic import make_synthetic_ce
 
 
@@ -17,9 +18,14 @@ from repro.data.synthetic import make_synthetic_ce
 class Domain:
     name: str
     ce: object
-    r_anc: jax.Array        # (k_q, N) anchor-query scores (offline index)
+    index: AnchorIndex      # the offline artifact every retriever consumes
     test_q: jax.Array       # (B,) test query ids
     exact: jax.Array        # (B, N) ground-truth scores for the test split
+
+    @property
+    def r_anc(self) -> jax.Array:
+        """The index's (k_q, N) score matrix (identity ids, no padding)."""
+        return self.index.r_anc
 
 
 def make_domain(
@@ -37,7 +43,9 @@ def make_domain(
     return Domain(
         name=name,
         ce=ce,
-        r_anc=m[:n_train_q],
+        index=AnchorIndex.from_r_anc(
+            m[:n_train_q], anchor_query_ids=jnp.arange(n_train_q)
+        ),
         test_q=jnp.arange(n_train_q, n_train_q + n_test_q),
         exact=m[n_train_q:],
     )

@@ -11,7 +11,8 @@ from __future__ import annotations
 import jax
 
 from repro.configs.base import AdaCURConfig
-from repro.core import adacur, retrieval
+from repro.core import retrieval
+from repro.core.engine import AdaCURRetriever
 
 from .common import emit, make_domain, timed
 
@@ -26,10 +27,10 @@ def run(dom=None, budget: int = 200, quiet: bool = False):
         cfg = AdaCURConfig(
             k_anchor=budget // 2, n_rounds=5, budget_ce=budget,
             strategy="topk", k_retrieve=100, round_epsilon=eps,
+            loop_mode="fori",
         )
-        res, us = timed(
-            lambda: adacur.adacur_search(score_fn, dom.r_anc, dom.test_q, cfg,
-                                         jax.random.PRNGKey(1)))
+        ret = AdaCURRetriever.from_index(dom.index, score_fn, cfg)
+        res, us = timed(lambda: ret.search(dom.test_q, jax.random.PRNGKey(1)))
         rep = retrieval.evaluate_result(f"eps{eps}", res, dom.exact)
         derived = ";".join(f"recall@{k}={v:.3f}" for k, v in rep.recall.items())
         emit(f"epsilon_rounds/eps{eps}/B{budget}", us, derived)

@@ -136,7 +136,7 @@ def run_engine(
     paths = {"dense": base, "fused": replace(base, use_fused_topk=True)}
     rets, compile_s = {}, {}
     for tag, cfg in paths.items():
-        rets[tag] = AdaCURRetriever(score_fn, dom.r_anc, cfg)
+        rets[tag] = AdaCURRetriever.from_index(dom.index, score_fn, cfg)
         t0 = time.perf_counter()
         jax.block_until_ready(rets[tag].search(queries, key))
         compile_s[tag] = time.perf_counter() - t0

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AdaCURConfig
-from repro.core import anncur, retrieval
+from repro.core import retrieval
 from repro.core.engine import AdaCURRetriever, ANNCURRetriever, RerankRetriever
 
 from .common import Domain, emit, make_domain, timed
@@ -38,39 +38,38 @@ def run(dom: Domain | None = None, quiet: bool = False, fused: bool = False):
                     k_retrieve=100, loop_mode="fori", use_fused_topk=fused)
         methods = {}
 
-        ret = AdaCURRetriever(score_fn, dom.r_anc,
-                              AdaCURConfig(strategy="topk", **base))
+        ret = AdaCURRetriever.from_index(dom.index, score_fn,
+                                         AdaCURConfig(strategy="topk", **base))
         methods["adacur_topk"] = timed(lambda: ret.search(dom.test_q, key), warmup=1)
 
-        ret_s = AdaCURRetriever(score_fn, dom.r_anc,
-                                AdaCURConfig(strategy="softmax", **base))
+        ret_s = AdaCURRetriever.from_index(dom.index, score_fn,
+                                           AdaCURConfig(strategy="softmax", **base))
         methods["adacur_softmax"] = timed(lambda: ret_s.search(dom.test_q, key), warmup=1)
 
         ns = dict(base, k_anchor=budget, split_budget=False)
-        ret_ns = AdaCURRetriever(score_fn, dom.r_anc,
-                                 AdaCURConfig(strategy="topk", **ns))
+        ret_ns = AdaCURRetriever.from_index(dom.index, score_fn,
+                                            AdaCURConfig(strategy="topk", **ns))
         methods["adacur_topk_nosplit"] = timed(lambda: ret_ns.search(dom.test_q, key), warmup=1)
 
         # ADACUR seeded by the DE retriever (paper's ADACUR_{DE_BASE+TopK})
         first = de_order[:, : budget // 5]
-        ret_de = AdaCURRetriever(
-            score_fn, dom.r_anc,
+        ret_de = AdaCURRetriever.from_index(
+            dom.index, score_fn,
             AdaCURConfig(strategy="topk", first_round="retriever", **ns),
         )
         methods["adacur_de_topk_nosplit"] = timed(
             lambda: ret_de.search(dom.test_q, key, first_anchors=first), warmup=1
         )
 
-        idx = anncur.build_index(dom.r_anc, k_anchor, key=jax.random.PRNGKey(2))
-        ret_a = ANNCURRetriever(score_fn, dom.r_anc, idx.anchor_idx, budget, 100)
+        idx = dom.index.with_anchors(k_anchor=k_anchor, key=jax.random.PRNGKey(2))
+        ret_a = ANNCURRetriever.from_index(idx, score_fn, budget, 100)
         methods["anncur"] = timed(lambda: ret_a.search(dom.test_q), warmup=1)
 
-        ret_ade = ANNCURRetriever(
-            score_fn, dom.r_anc, de_order[0, :k_anchor], budget, 100
-        )
+        idx_de = dom.index.with_anchors(anchor_pos=de_order[0, :k_anchor])
+        ret_ade = ANNCURRetriever.from_index(idx_de, score_fn, budget, 100)
         methods["anncur_de"] = timed(lambda: ret_ade.search(dom.test_q), warmup=1)
 
-        ret_rr = RerankRetriever(score_fn, dom.r_anc, budget, 100)
+        ret_rr = RerankRetriever.from_index(dom.index, score_fn, budget, 100)
         methods["de_rerank"] = timed(
             lambda: ret_rr.search(dom.test_q, candidate_idx=de_order), warmup=1
         )

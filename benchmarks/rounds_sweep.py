@@ -6,7 +6,8 @@ from __future__ import annotations
 import jax
 
 from repro.configs.base import AdaCURConfig
-from repro.core import adacur, retrieval
+from repro.core import retrieval
+from repro.core.engine import AdaCURRetriever
 
 from .common import emit, make_domain, timed
 
@@ -21,10 +22,9 @@ def run(dom=None, budget: int = 200, quiet: bool = False):
         k_anchor = budget // 2
         k_anchor -= k_anchor % nr
         cfg = AdaCURConfig(k_anchor=k_anchor, n_rounds=nr, budget_ce=budget,
-                           strategy="topk", k_retrieve=100)
-        res, us = timed(
-            lambda: adacur.adacur_search(score_fn, dom.r_anc, dom.test_q, cfg,
-                                         jax.random.PRNGKey(1)))
+                           strategy="topk", k_retrieve=100, loop_mode="fori")
+        ret = AdaCURRetriever.from_index(dom.index, score_fn, cfg)
+        res, us = timed(lambda: ret.search(dom.test_q, jax.random.PRNGKey(1)))
         rep = retrieval.evaluate_result(f"rounds{nr}", res, dom.exact)
         derived = ";".join(f"recall@{k}={v:.3f}" for k, v in rep.recall.items())
         emit(f"rounds_sweep/Nr{nr}/B{budget}", us, derived)

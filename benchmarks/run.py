@@ -20,6 +20,7 @@ def main() -> None:
         approx_error,
         common,
         epsilon_rounds,
+        index_build,
         kernels_micro,
         latency_breakdown,
         oracle_sampling,
@@ -43,6 +44,11 @@ def main() -> None:
         ("pinv_incremental (beyond-paper)", pinv_incremental.run),
         ("epsilon_rounds (beyond-paper)", lambda: epsilon_rounds.run(dom)),
         ("kernels_micro", kernels_micro.run),
+        (
+            "index_build (offline lifecycle)",
+            (lambda: index_build.run(n_items=2000, k_q=64, block_rows=16))
+            if args.fast else index_build.run,
+        ),
     ]
     failed = 0
     for name, fn in suites:

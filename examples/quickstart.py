@@ -2,17 +2,19 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a 10K-item domain, indexes 500 anchor queries offline, then runs
-budget-matched retrieval with the paper's method and the fixed-anchor
-baseline — both as configurations of the unified Retriever engine — and
-prints Top-k-Recall."""
+Builds a 10K-item domain, wraps the offline scores in the one
+:class:`AnchorIndex` artifact (build/save/load/shard/mutate lives there),
+then runs budget-matched retrieval with the paper's method and the
+fixed-anchor baseline — both as configurations of the unified Retriever
+engine — and prints Top-k-Recall."""
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AdaCURConfig
-from repro.core import anncur, retrieval
+from repro.core import retrieval
 from repro.core.engine import AdaCURRetriever, ANNCURRetriever
+from repro.core.index import AnchorIndex
 from repro.data.synthetic import make_synthetic_ce
 
 
@@ -20,8 +22,12 @@ def main():
     print("building synthetic CE domain: 10,000 items, 500 anchor queries...")
     ce = make_synthetic_ce(jax.random.PRNGKey(0), n_queries=600, n_items=10000)
     m = ce.full_matrix(jnp.arange(600))
-    r_anc, test_q, exact = m[:500], jnp.arange(500, 600), m[500:]
+    test_q, exact = jnp.arange(500, 600), m[500:]
     score_fn = ce.score_fn()
+
+    # the offline artifact: anchor-query scores + ids; at scale this is
+    # AnchorIndex.build(...) (resumable) + .save()/.load() + .shard(mesh)
+    index = AnchorIndex.from_r_anc(m[:500], anchor_query_ids=jnp.arange(500))
 
     budget = 200  # exact CE calls per query at test time
     print(f"\nCE-call budget per query: {budget}  (brute force would need 10,000)\n")
@@ -29,12 +35,12 @@ def main():
     cfg = AdaCURConfig(k_anchor=100, n_rounds=5, budget_ce=budget,
                        strategy="topk", k_retrieve=100, loop_mode="fori",
                        use_fused_topk=True)
-    ret = AdaCURRetriever(score_fn, r_anc, cfg)
+    ret = AdaCURRetriever.from_index(index, score_fn, cfg)
     res = ret.search(test_q, jax.random.PRNGKey(1))
     rep = retrieval.evaluate_result("ADACUR(TopK,5 rounds)", res, exact)
 
-    idx = anncur.build_index(r_anc, 100, key=jax.random.PRNGKey(2))
-    ret2 = ANNCURRetriever(score_fn, r_anc, idx.anchor_idx, budget, 100)
+    idx = index.with_anchors(k_anchor=100, key=jax.random.PRNGKey(2))
+    ret2 = ANNCURRetriever.from_index(idx, score_fn, budget, 100)
     res2 = ret2.search(test_q)
     rep2 = retrieval.evaluate_result("ANNCUR(random anchors)", res2, exact)
 

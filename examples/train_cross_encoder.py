@@ -25,7 +25,9 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs import registry
 from repro.configs.base import AdaCURConfig, replace
-from repro.core import adacur, anncur, index as index_lib, retrieval
+from repro.core import retrieval
+from repro.core.engine import AdaCURRetriever, ANNCURRetriever
+from repro.core.index import AnchorIndex
 from repro.data.synthetic import make_zeshel_like
 from repro.distributed.fault_tolerance import StragglerWatchdog
 from repro.models import cross_encoder
@@ -124,13 +126,14 @@ def main():
             out.append(bulk_rows(q_ids, toks))
         return jnp.concatenate(out, axis=1)
 
-    print("building R_anc with the trained CE (resumable block builder)...")
+    print("building the AnchorIndex with the trained CE (resumable block builder)...")
     t0 = time.time()
-    r_anc = index_lib.build_r_anc(
+    index = AnchorIndex.build(
         bulk_score, jnp.arange(n_train_q), jnp.arange(args.n_items),
         block_rows=32,
     )
-    print(f"R_anc {r_anc.shape} in {time.time() - t0:.0f}s")
+    print(f"AnchorIndex (k_q={index.k_q}, |I|={index.n_items}) "
+          f"in {time.time() - t0:.0f}s")
 
     test_q = np.arange(n_train_q, args.n_queries)
     exact = np.asarray(bulk_score(test_q, item_ids_all))
@@ -144,11 +147,15 @@ def main():
     budget = args.budget
     acfg = AdaCURConfig(k_anchor=budget // 2, n_rounds=4, budget_ce=budget,
                         strategy="topk", k_retrieve=64)
-    res_a = adacur.adacur_search(score_fn, r_anc, test_q, acfg, jax.random.PRNGKey(1))
+    # jit=False: the tokenizing score_fn is numpy-backed (non-traceable)
+    res_a = AdaCURRetriever.from_index(index, score_fn, acfg, jit=False).search(
+        test_q, jax.random.PRNGKey(1)
+    )
     rep_a = retrieval.evaluate_result("ADACUR", res_a, exact, ks=(1, 10, 64))
 
-    idx = anncur.build_index(r_anc, budget // 2, key=jax.random.PRNGKey(2))
-    res_n = anncur.search(score_fn, idx, test_q, budget, 64)
+    idx = index.with_anchors(k_anchor=budget // 2, key=jax.random.PRNGKey(2))
+    res_n = ANNCURRetriever.from_index(idx, score_fn, budget, 64,
+                                       jit=False).search(test_q)
     rep_n = retrieval.evaluate_result("ANNCUR", res_n, exact, ks=(1, 10, 64))
 
     tfidf = tfidf_retriever(ds)

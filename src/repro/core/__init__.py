@@ -4,9 +4,9 @@
 - ``sampling``  anchor sampling strategies (TopK/SoftMax/Random + oracles)
 - ``adacur``    Algorithm 1 reference implementation (growing shapes)
 - ``engine``    static-shape round engine + unified Retriever API (hot path)
-- ``anncur``    fixed-anchor baseline (Yadav et al. 2022)
+- ``anncur``    deprecated ANNCUR shims (view over AnchorIndex + engine)
 - ``retrieval`` budget-matched retrieve-and-rerank + recall metrics
-- ``index``     offline R_anc builder (resumable, shardable)
+- ``index``     the AnchorIndex offline artifact (build/save/load/shard/mutate)
 """
 
 from . import adacur, anncur, cur, engine, index, retrieval, sampling  # noqa: F401
@@ -20,3 +20,4 @@ from .engine import (  # noqa: F401
     engine_search,
     make_engine,
 )
+from .index import AnchorIndex, build_r_anc  # noqa: F401

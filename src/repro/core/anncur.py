@@ -1,29 +1,47 @@
-"""ANNCUR baseline (Yadav et al. 2022) — fixed anchor items, one round.
+"""ANNCUR baseline (Yadav et al. 2022) — DEPRECATED thin view.
 
-Offline: choose ``k_i`` anchor items (uniformly at random, or from a
-retriever), precompute latent item embeddings ``E_I = U @ R_anc`` with
-``U = pinv(R_anc[:, I_anc])``.  Online: the latent query embedding is the
-vector of exact CE scores against the anchors, and approximate scores are a
-single (B,k_i)x(k_i,N) GEMM — followed by retrieve-and-rerank under the same
-CE-call budget accounting as ADACUR.
+ANNCUR's offline product (fixed anchor items, ``U = pinv(R_anc[:, I_anc])``,
+latent item embeddings ``E_I = U @ R_anc``) now lives inside the first-class
+:class:`repro.core.index.AnchorIndex` artifact
+(``AnchorIndex.with_latents``), and its online search is one configuration
+of the unified engine (:class:`repro.core.engine.ANNCURRetriever` — a single
+retriever-seeded round plus the split-budget rerank).  This module keeps the
+historical entry points alive as deprecated shims:
+
+- :func:`build_index` builds an ``AnchorIndex`` with latents and returns the
+  legacy :class:`ANNCURIndex` view over it;
+- :func:`search` delegates to ``ANNCURRetriever`` (identical budget
+  accounting; parity is asserted in ``tests/test_engine.py``).
+
+New code should use ``AnchorIndex`` + ``ANNCURRetriever.from_index``.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from . import cur, sampling
 from .adacur import AdaCURResult, ScoreFn
 
 
 @dataclass
 class ANNCURIndex:
-    anchor_idx: jax.Array     # (k_i,) fixed anchor item ids
-    item_embeddings: jax.Array  # (k_i, N) = U @ R_anc
+    """Deprecated view of an :class:`~repro.core.index.AnchorIndex` carrying
+    ANNCUR latents.  ``anchor_idx``/``item_embeddings`` alias the parent's
+    ``anchor_item_pos``/``item_embeddings`` arrays."""
+
+    anchor_idx: jax.Array        # (k_i,) fixed anchor item positions
+    item_embeddings: jax.Array   # (k_i, N) = U @ R_anc
+    parent: Optional[object] = None   # the owning AnchorIndex
+
+    @classmethod
+    def from_anchor_index(cls, index) -> "ANNCURIndex":
+        if index.anchor_item_pos is None:
+            raise ValueError("AnchorIndex has no latents; call with_latents()")
+        return cls(index.anchor_item_pos, index.item_embeddings, parent=index)
 
 
 def build_index(
@@ -33,53 +51,47 @@ def build_index(
     anchor_idx: Optional[jax.Array] = None,
     rcond: float = 1e-6,
 ) -> ANNCURIndex:
-    """Offline indexing: anchors uniform-at-random unless explicitly given."""
-    _, n_items = r_anc.shape
-    if anchor_idx is None:
-        if key is None:
-            raise ValueError("need key or explicit anchor_idx")
-        anchor_idx = jax.random.choice(
-            key, n_items, shape=(k_anchor,), replace=False
-        )
-    u = cur.pinv(r_anc[:, anchor_idx], rcond)      # (k_i, k_q)
-    return ANNCURIndex(anchor_idx, u @ r_anc)      # (k_i, N)
+    """Deprecated: use ``AnchorIndex.from_r_anc(...).with_latents(...)``."""
+    warnings.warn(
+        "anncur.build_index is deprecated; use AnchorIndex.with_latents()",
+        DeprecationWarning, stacklevel=2,
+    )
+    from .index import AnchorIndex
+
+    if anchor_idx is None and key is None:
+        raise ValueError("need key or explicit anchor_idx")
+    index = AnchorIndex.from_r_anc(r_anc).with_latents(
+        k_anchor=k_anchor, key=key, anchor_pos=anchor_idx, rcond=rcond
+    )
+    return ANNCURIndex.from_anchor_index(index)
 
 
 def search(
     score_fn: ScoreFn,
-    index: ANNCURIndex,
+    index,
     query,
     budget_ce: int,
     k_retrieve: int,
 ) -> AdaCURResult:
-    """Retrieve-and-rerank with ANNCUR under a CE-call budget.
+    """Deprecated: delegates to the engine's :class:`ANNCURRetriever`.
 
     ``k_i`` CE calls produce the query embedding; the remaining
     ``budget_ce - k_i`` calls re-rank the top approximate-scoring non-anchor
     items (anchors re-rank for free, same accounting as ADACUR).
     """
-    k_i = index.anchor_idx.shape[0]
-    if budget_ce < k_i:
-        raise ValueError(f"budget_ce={budget_ce} < k_anchor={k_i}")
-    b = jax.tree_util.tree_leaves(query)[0].shape[0]
-    anchor_idx = jnp.broadcast_to(index.anchor_idx[None, :], (b, k_i))
-    e_q = score_fn(query, anchor_idx)              # (B, k_i) exact CE scores
-    s_hat = e_q @ index.item_embeddings            # (B, N)
+    warnings.warn(
+        "anncur.search is deprecated; use ANNCURRetriever.from_index()",
+        DeprecationWarning, stacklevel=2,
+    )
+    from .engine import ANNCURRetriever
 
-    n_items = s_hat.shape[1]
-    selected = jnp.zeros((b, n_items), dtype=bool)
-    selected = selected.at[jnp.arange(b)[:, None], anchor_idx].set(True)
-
-    k_r = budget_ce - k_i
-    if k_r > 0:
-        masked = jnp.where(selected, sampling.NEG_INF, s_hat)
-        _, rerank_idx = jax.lax.top_k(masked, k_r)
-        rerank_scores = score_fn(query, rerank_idx)
-        pool_idx = jnp.concatenate([anchor_idx, rerank_idx], axis=1)
-        pool_scores = jnp.concatenate([e_q, rerank_scores], axis=1)
-    else:
-        pool_idx, pool_scores = anchor_idx, e_q
-    k = min(k_retrieve, pool_idx.shape[1])
-    top_s, top_pos = jax.lax.top_k(pool_scores, k)
-    top_idx = jnp.take_along_axis(pool_idx, top_pos, axis=1)
-    return AdaCURResult(anchor_idx, e_q, s_hat, top_idx, top_s, budget_ce)
+    parent = index.parent if isinstance(index, ANNCURIndex) else index
+    if parent is None:
+        raise ValueError(
+            "legacy ANNCURIndex without a parent AnchorIndex; construct via "
+            "anncur.build_index or use ANNCURRetriever directly"
+        )
+    ret = ANNCURRetriever.from_index(
+        parent, score_fn, budget_ce=budget_ce, k_retrieve=k_retrieve
+    )
+    return ret.search(query)

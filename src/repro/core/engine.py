@@ -39,6 +39,7 @@ from typing import Callable, NamedTuple, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs.base import AdaCURConfig, replace
 from ..kernels.approx_topk.ops import approx_topk_op
@@ -57,14 +58,19 @@ class EngineState(NamedTuple):
     selected: jax.Array      # (B, N) bool mask of already-selected items
 
 
-def _fused_suppress(cfg: AdaCURConfig, state: EngineState) -> dict:
+def _fused_suppress(
+    cfg: AdaCURConfig, state: EngineState, force_mask: bool = False
+) -> dict:
     """How the fused op suppresses already-selected items, per backend.
 
     On TPU (compiled kernel) the (B, k_i) anchor-id list stays resident in
     VMEM and is compared per tile — no (B, N) traffic.  On the CPU scan
     backend the engine's existing (B, N) bool ``selected`` mask is streamed
-    tile-by-tile instead: O(B·T) per tile beats the O(B·T·A) id compare."""
-    if cfg.fused_interpret:
+    tile-by-tile instead: O(B·T) per tile beats the O(B·T·A) id compare.
+    ``force_mask`` routes through the mask even on TPU — required when the
+    valid-item bound is a *runtime* value (dynamic corpora), because the
+    anchor-id compare cannot see the invalid padded tail."""
+    if cfg.fused_interpret or force_mask:
         return dict(anchors=None, mask=state.selected)
     return dict(anchors=state.anchor_idx, mask=None)
 
@@ -76,6 +82,7 @@ def _sample_round(
     r_anc: jax.Array,
     k_eff: int,
     n_valid: Optional[int],
+    force_mask: bool = False,
 ) -> jax.Array:
     """One adaptive round's anchor pick (Alg. 3) — dense or fused."""
     if not cfg.use_fused_topk:
@@ -85,7 +92,7 @@ def _sample_round(
         )
     if cfg.strategy == "random":
         return sampling.sample_random(key, state.selected, k_eff)
-    suppress = _fused_suppress(cfg, state)
+    suppress = _fused_suppress(cfg, state, force_mask)
     if cfg.strategy == "softmax":
         # temp folds into e_q (scores/temp == (e_q/temp) @ R_anc); Gumbel
         # noise enters the kernel as an input, S_hat stays in VMEM.
@@ -114,6 +121,7 @@ def _make_round_body(
     keys: jax.Array,
     k_s: int,
     n_valid: Optional[int],
+    force_mask: bool = False,
 ) -> Callable[[jax.Array, EngineState], EngineState]:
     """The shape-invariant adaptive round body (rounds 1..n_rounds-1).
 
@@ -124,7 +132,9 @@ def _make_round_body(
         key_r = keys[r]
         b = state.selected.shape[0]
         row_ids = jnp.arange(b)[:, None]
-        idx_new = _sample_round(cfg, key_r, state, r_anc, k_s - n_rand, n_valid)
+        idx_new = _sample_round(
+            cfg, key_r, state, r_anc, k_s - n_rand, n_valid, force_mask
+        )
         if n_rand:
             # ε-greedy diversity mix (beyond-paper; see AdaCURConfig)
             sel_tmp = state.selected.at[row_ids, idx_new].set(True)
@@ -164,17 +174,26 @@ def _make_round_body(
     return body
 
 
-def _provisional_topk(cfg: AdaCURConfig, e_q, r_anc, m: int, n_valid):
-    """Top-m candidate ids of S_hat (unmasked) — the early-exit monitor."""
+def _provisional_topk(cfg: AdaCURConfig, e_q, r_anc, m: int, n_valid, invalid=None):
+    """Top-m candidate ids of S_hat (unmasked) — the early-exit monitor.
+
+    ``invalid`` is the (N,) runtime invalid-column mask of a dynamic corpus
+    (padded capacity); it replaces the static ``n_valid`` bound."""
     if cfg.use_fused_topk:
+        mask = (
+            None if invalid is None
+            else jnp.broadcast_to(invalid[None, :], (e_q.shape[0], r_anc.shape[1]))
+        )
         _, idx = approx_topk_op(
             e_q, r_anc, None, m, tile=cfg.fused_tile,
-            interpret=cfg.fused_interpret, n_valid=n_valid,
+            interpret=cfg.fused_interpret, n_valid=n_valid, mask=mask,
         )
         return idx
     s_hat = e_q @ r_anc
     if n_valid is not None and n_valid < s_hat.shape[1]:
         s_hat = jnp.where(jnp.arange(s_hat.shape[1]) < n_valid, s_hat, sampling.NEG_INF)
+    if invalid is not None:
+        s_hat = jnp.where(invalid[None, :], sampling.NEG_INF, s_hat)
     _, idx = jax.lax.top_k(s_hat, m)
     return idx
 
@@ -202,9 +221,10 @@ def engine_search(
     key: jax.Array,
     first_anchors: Optional[jax.Array] = None,
     batch: Optional[int] = None,
-    n_valid_items: Optional[int] = None,
+    n_valid_items=None,
     n_rounds=None,
     return_scores: Optional[bool] = None,
+    item_ids: Optional[jax.Array] = None,
 ) -> AdaCURResult:
     """Run Algorithm 1 (+ retrieval) through the static-shape round engine.
 
@@ -221,6 +241,12 @@ def engine_search(
     - ``return_scores``: the (B, N) ``approx_scores`` field is only
       materialized on request (defaults to the dense path's behavior; the
       fused path defaults to ``None`` so no (B, N) buffer ever exists).
+
+    Two further extensions serve the :class:`~repro.core.index.AnchorIndex`
+    lifecycle: ``n_valid_items`` may be a *traced* int32 (dynamic corpora —
+    growing/shrinking the valid prefix of a padded index never retraces),
+    and ``item_ids`` (N,) maps engine positions to external corpus ids
+    before every ``score_fn`` call.
     """
     k_q, n_items = r_anc.shape
     k_i = cfg.budget_ce if not cfg.split_budget else cfg.k_anchor
@@ -231,10 +257,22 @@ def engine_search(
     if return_scores is None:
         return_scores = not cfg.use_fused_topk
     n_valid = None
-    if n_valid_items is not None and n_valid_items < n_items:
-        n_valid = n_valid_items
+    invalid = None                        # (N,) runtime invalid-column mask
+    if n_valid_items is not None:
+        if isinstance(n_valid_items, (int, np.integer)):
+            if n_valid_items < n_items:
+                n_valid = int(n_valid_items)
+        else:
+            nv = jnp.minimum(jnp.asarray(n_valid_items, jnp.int32), n_items)
+            invalid = jnp.arange(n_items, dtype=jnp.int32) >= nv
+    dyn_valid = invalid is not None
     if cfg.loop_mode == "unrolled" and n_rounds is not None:
         raise ValueError("runtime n_rounds override requires loop_mode='fori'")
+    if item_ids is not None:
+        _raw_score_fn = score_fn
+
+        def score_fn(q, idx, _f=_raw_score_fn, _ids=item_ids):
+            return _f(q, jnp.take(_ids, idx, axis=0))
 
     if first_anchors is not None:
         b = first_anchors.shape[0]
@@ -251,6 +289,8 @@ def engine_search(
     selected = jnp.zeros((b, n_items), dtype=bool)
     if n_valid is not None:
         selected = selected | (jnp.arange(n_items) >= n_valid)
+    if invalid is not None:
+        selected = selected | invalid[None, :]
 
     # same RNG stream as the seed path: keys[r] drives round r
     keys = jax.random.split(key, r_max + 1)
@@ -289,7 +329,9 @@ def engine_search(
         e_q = jnp.zeros((b, k_q), dtype)
     state = EngineState(anchor_idx, c_test, a_buf, p, e_q, selected)
 
-    body = _make_round_body(score_fn, r_anc, query, cfg, keys, k_s, n_valid)
+    body = _make_round_body(
+        score_fn, r_anc, query, cfg, keys, k_s, n_valid, force_mask=dyn_valid
+    )
 
     # --- rounds 1..n_rounds-1 ----------------------------------------------
     if cfg.loop_mode == "unrolled":
@@ -301,7 +343,7 @@ def engine_search(
         r_dyn = jnp.clip(r_dyn, 1, r_max)
         if cfg.early_exit_tol > 0.0:
             m = min(cfg.k_retrieve, n_items)
-            prev = _provisional_topk(cfg, state.e_q, r_anc, m, n_valid)
+            prev = _provisional_topk(cfg, state.e_q, r_anc, m, n_valid, invalid)
 
             def cond(carry):
                 r, frac, _, _ = carry
@@ -310,7 +352,7 @@ def engine_search(
             def while_body(carry):
                 r, _, st, prev_top = carry
                 st = body(r, st)
-                cur_top = _provisional_topk(cfg, st.e_q, r_anc, m, n_valid)
+                cur_top = _provisional_topk(cfg, st.e_q, r_anc, m, n_valid, invalid)
                 hit = (cur_top[:, :, None] == prev_top[:, None, :]).any(-1)
                 return r + 1, hit.mean(), st, cur_top
 
@@ -345,7 +387,7 @@ def engine_search(
         _, rerank_idx = approx_topk_op(
             state.e_q, r_anc, k=k_r, tile=cfg.fused_tile,
             interpret=cfg.fused_interpret, n_valid=n_valid,
-            **_fused_suppress(cfg, state),
+            **_fused_suppress(cfg, state, dyn_valid),
         )
     else:
         full = s_hat if s_hat is not None else state.e_q @ r_anc
@@ -368,31 +410,47 @@ def make_engine(
     cfg: AdaCURConfig,
     n_valid_items=None,
     return_scores: Optional[bool] = None,
+    jit_compile: bool = True,
 ):
     """jit-compiled engine closure over a concrete scorer + config.
 
     In ``fori`` mode the returned callable takes an optional runtime
     ``n_rounds`` (any value in [1, cfg.n_rounds]) *without retracing* — the
-    round count is a traced operand of one compiled executable.
-    """
+    round count is a traced operand of one compiled executable.  ``n_valid``
+    and ``item_ids`` are likewise traced operands (AnchorIndex dynamic
+    corpora: mutation changes their *values*, never the trace).
 
-    @partial(jax.jit, static_argnames=("batch",))
-    def _run(r_anc, query, key, n_rounds, first_anchors=None, batch=None):
+    ``jit_compile=False`` runs the engine eagerly (``loop_mode='unrolled'``
+    only) so non-traceable scorers — numpy tokenizers, external CE services —
+    still go through the one engine code path.
+    """
+    if not jit_compile and cfg.loop_mode != "unrolled":
+        raise ValueError("jit_compile=False requires loop_mode='unrolled'")
+
+    def _run(r_anc, query, key, n_rounds, first_anchors=None, batch=None,
+             n_valid=None, item_ids=None):
         return engine_search(
             score_fn, r_anc, query, cfg, key,
             first_anchors=first_anchors, batch=batch,
-            n_valid_items=n_valid_items, n_rounds=n_rounds,
-            return_scores=return_scores,
+            n_valid_items=n_valid if n_valid is not None else n_valid_items,
+            n_rounds=n_rounds, return_scores=return_scores, item_ids=item_ids,
         )
 
-    def run(r_anc, query, key, first_anchors=None, batch=None, n_rounds=None):
+    if jit_compile:
+        _run = partial(jax.jit, static_argnames=("batch",))(_run)
+
+    def run(r_anc, query, key, first_anchors=None, batch=None, n_rounds=None,
+            n_valid=None, item_ids=None):
         if cfg.loop_mode == "fori":
             n_rounds = jnp.asarray(
                 cfg.n_rounds if n_rounds is None else n_rounds, jnp.int32
             )
         elif n_rounds is not None:
             raise ValueError("runtime n_rounds override requires loop_mode='fori'")
-        return _run(r_anc, query, key, n_rounds, first_anchors, batch)
+        if n_valid is not None:
+            n_valid = jnp.asarray(n_valid, jnp.int32)
+        return _run(r_anc, query, key, n_rounds, first_anchors, batch,
+                    n_valid, item_ids)
 
     return run
 
@@ -411,70 +469,149 @@ class Retriever(Protocol):
         ...
 
 
+class _IndexBacked:
+    """Shared plumbing for retrievers that consume an AnchorIndex.
+
+    The index's arrays (``r_anc``, ``n_valid``, ``item_ids``) enter the
+    compiled engine as *traced operands* read from ``self.index`` at every
+    search, so swapping in a mutated index (``retriever.index = new_index``)
+    changes values only — shapes are capacity-constant and nothing retraces.
+
+    The runtime ``n_valid`` bound is only passed when the index is (or was
+    constructed) padded: an unpadded index keeps the engine's static path,
+    whose fused TPU sampling suppresses via the compact anchor-id list
+    instead of a (B, N) mask.  Removing items from an unpadded index flips
+    it to the dynamic path (one retrace, then stable).
+    """
+
+    def _search_operands(self):
+        if self.index is None:
+            return self.r_anc, {}
+        kw = dict(item_ids=self.index.item_ids)
+        if not getattr(self, "_dynamic_valid", False):
+            # the padded? device->host sync runs once per index object, not
+            # per search; once dynamic, the trace stays dynamic forever
+            if getattr(self, "_seen_index", None) is not self.index:
+                self._seen_index = self.index
+                self._dynamic_valid = self.index.capacity > self.index.n_items
+        if self._dynamic_valid:
+            kw["n_valid"] = self.index.n_valid
+        return self.index.r_anc, kw
+
+
 @dataclass
-class AdaCURRetriever:
+class AdaCURRetriever(_IndexBacked):
     """The paper's method (Alg. 1) on the static-shape engine."""
 
     score_fn: ScoreFn
-    r_anc: jax.Array
+    r_anc: Optional[jax.Array]
     cfg: AdaCURConfig
     n_valid_items: Optional[int] = None
+    index: Optional[object] = None       # repro.core.index.AnchorIndex
+    jit: bool = True
     _run: Callable = field(init=False, repr=False)
 
     def __post_init__(self):
-        self._run = make_engine(self.score_fn, self.cfg, self.n_valid_items)
+        if self.r_anc is None and self.index is None:
+            raise ValueError("need r_anc or an AnchorIndex")
+        self._run = make_engine(
+            self.score_fn, self.cfg, self.n_valid_items, jit_compile=self.jit
+        )
 
-    def search(self, query, key=None, first_anchors=None, batch=None, n_rounds=None):
+    @classmethod
+    def from_index(cls, index, score_fn: ScoreFn, cfg: AdaCURConfig,
+                   jit: bool = True) -> "AdaCURRetriever":
+        """Bind the engine to an :class:`~repro.core.index.AnchorIndex`:
+        ``score_fn`` receives *external item ids* (the engine maps positions
+        through ``index.item_ids``), padded capacity is masked through the
+        runtime ``n_valid`` bound, and index mutation never retraces."""
+        return cls(score_fn, None, cfg, index=index, jit=jit)
+
+    def search(self, query, key=None, first_anchors=None, batch=None,
+               n_rounds=None, **_ignored):
         key = jax.random.PRNGKey(0) if key is None else key
+        r_anc, kw = self._search_operands()
         return self._run(
-            self.r_anc, query, key, first_anchors=first_anchors, batch=batch,
-            n_rounds=n_rounds,
+            r_anc, query, key, first_anchors=first_anchors, batch=batch,
+            n_rounds=n_rounds, **kw,
         )
 
 
 @dataclass
-class ANNCURRetriever:
+class ANNCURRetriever(_IndexBacked):
     """Fixed-anchor one-round special case (Yadav et al. 2022).
 
     The offline index is just the anchor id set; ``search`` is one
     retriever-seeded engine round followed by the split-budget rerank — the
-    identical code path ADACUR uses, at ``n_rounds=1``.
+    identical code path ADACUR uses, at ``n_rounds=1``.  With
+    ``budget_ce == k_anchor`` there is no rerank budget left and the final
+    ranking is the free exact-score ranking of the anchors themselves
+    (the engine's no-split configuration).
     """
 
     score_fn: ScoreFn
-    r_anc: jax.Array
-    anchor_idx: jax.Array        # (k_i,) fixed anchor item ids
-    budget_ce: int
+    r_anc: Optional[jax.Array]
+    anchor_idx: Optional[jax.Array]      # (k_i,) fixed anchor item positions
+    budget_ce: int = 0
     k_retrieve: int = 100
     pinv_rcond: float = 1e-6
     base_cfg: Optional[AdaCURConfig] = None
+    index: Optional[object] = None       # repro.core.index.AnchorIndex
+    jit: bool = True
     _run: Callable = field(init=False, repr=False)
 
     def __post_init__(self):
-        k_i = int(self.anchor_idx.shape[0])
+        if self.anchor_idx is None:
+            if self.index is None or self.index.anchor_item_pos is None:
+                raise ValueError(
+                    "need anchor_idx or an AnchorIndex with anchors "
+                    "(index.with_anchors() / with_latents())"
+                )
+            k_i = int(self.index.anchor_item_pos.shape[0])
+        else:
+            k_i = int(self.anchor_idx.shape[0])
+        if self.r_anc is None and self.index is None:
+            raise ValueError("need r_anc or an AnchorIndex")
         if self.budget_ce < k_i:
             raise ValueError(f"budget_ce={self.budget_ce} < k_anchor={k_i}")
         base = self.base_cfg or AdaCURConfig()
+        split = self.budget_ce > k_i
         self.cfg = replace(
             base, k_anchor=k_i, n_rounds=1, budget_ce=self.budget_ce,
-            split_budget=True, first_round="retriever",
+            split_budget=split, first_round="retriever",
             k_retrieve=self.k_retrieve, pinv_rcond=self.pinv_rcond,
             round_epsilon=0.0, early_exit_tol=0.0,
         )
-        self._run = make_engine(self.score_fn, self.cfg)
+        self._run = make_engine(self.score_fn, self.cfg, jit_compile=self.jit)
+
+    @classmethod
+    def from_index(cls, index, score_fn: ScoreFn, budget_ce: int,
+                   k_retrieve: int = 100, pinv_rcond: float = 1e-6,
+                   base_cfg: Optional[AdaCURConfig] = None,
+                   jit: bool = True) -> "ANNCURRetriever":
+        """ANNCUR over an :class:`~repro.core.index.AnchorIndex` that carries
+        latents; anchors are read from the index at every search, so a
+        mutated index (whose anchor positions may have been compacted) is
+        picked up without retracing."""
+        return cls(score_fn, None, None, budget_ce, k_retrieve, pinv_rcond,
+                   base_cfg, index=index, jit=jit)
 
     def search(self, query, key=None, **kw):
         key = jax.random.PRNGKey(0) if key is None else key
+        anchors = (
+            self.index.anchor_item_pos
+            if self.anchor_idx is None else self.anchor_idx
+        )
         b = jax.tree_util.tree_leaves(query)[0].shape[0]
         first = jnp.broadcast_to(
-            self.anchor_idx[None, :].astype(jnp.int32),
-            (b, self.anchor_idx.shape[0]),
+            anchors[None, :].astype(jnp.int32), (b, anchors.shape[0])
         )
-        return self._run(self.r_anc, query, key, first_anchors=first)
+        r_anc, opkw = self._search_operands()
+        return self._run(r_anc, query, key, first_anchors=first, **opkw)
 
 
 @dataclass
-class RerankRetriever:
+class RerankRetriever(_IndexBacked):
     """Retrieve-and-rerank baseline: one retriever-seeded round, no split.
 
     Every candidate is exact-CE scored (they *are* the anchors) and the
@@ -483,13 +620,17 @@ class RerankRetriever:
     """
 
     score_fn: ScoreFn
-    r_anc: jax.Array
-    budget_ce: int
+    r_anc: Optional[jax.Array]
+    budget_ce: int = 0
     k_retrieve: int = 100
     base_cfg: Optional[AdaCURConfig] = None
+    index: Optional[object] = None       # repro.core.index.AnchorIndex
+    jit: bool = True
     _run: Callable = field(init=False, repr=False)
 
     def __post_init__(self):
+        if self.r_anc is None and self.index is None:
+            raise ValueError("need r_anc or an AnchorIndex")
         base = self.base_cfg or AdaCURConfig()
         self.cfg = replace(
             base, k_anchor=self.budget_ce, n_rounds=1,
@@ -498,14 +639,25 @@ class RerankRetriever:
             round_epsilon=0.0, early_exit_tol=0.0,
         )
         # pure rerank never reads S_hat: skip the pinv/e_q machinery
-        self._run = make_engine(self.score_fn, self.cfg, return_scores=False)
+        self._run = make_engine(
+            self.score_fn, self.cfg, return_scores=False, jit_compile=self.jit
+        )
+
+    @classmethod
+    def from_index(cls, index, score_fn: ScoreFn, budget_ce: int,
+                   k_retrieve: int = 100,
+                   base_cfg: Optional[AdaCURConfig] = None,
+                   jit: bool = True) -> "RerankRetriever":
+        return cls(score_fn, None, budget_ce, k_retrieve, base_cfg,
+                   index=index, jit=jit)
 
     def search(self, query, key=None, candidate_idx=None, **kw):
         if candidate_idx is None:
             raise ValueError("RerankRetriever.search needs candidate_idx (B, >=budget)")
         key = jax.random.PRNGKey(0) if key is None else key
         first = candidate_idx[:, : self.budget_ce].astype(jnp.int32)
-        return self._run(self.r_anc, query, key, first_anchors=first)
+        r_anc, opkw = self._search_operands()
+        return self._run(r_anc, query, key, first_anchors=first, **opkw)
 
 
 # ---------------------------------------------------------------------------

@@ -1,35 +1,59 @@
-"""Offline R_anc indexing: score k_q anchor queries against ALL items.
+"""The offline side of the system: the first-class :class:`AnchorIndex` artifact.
 
-This is the O(k_q·|I|·C_f) offline stage of both ANNCUR and ADACUR — an
-embarrassingly parallel batch-inference job.  The builder:
+Every retriever in this codebase searches the same offline product — the
+anchor-query/item score matrix ``R_anc`` plus whatever was precomputed from
+it.  Following the paper's follow-up (Yadav et al., *Adaptive Retrieval and
+Scalable Indexing*, arXiv 2405.03651) the index is a first-class artifact
+with a full lifecycle, not a bare array:
 
-- streams (query-block x item-block) chunks through any scorer,
-- shards blocks over the mesh when one is installed,
-- checkpoints finished row-blocks so a preempted job resumes where it left
-  off (fault tolerance for the multi-day pod-scale indexing run).
+- **build**: :meth:`AnchorIndex.build` streams (query-block x item) chunks
+  through any bulk scorer — the O(k_q·|I|·C_f) offline stage is an
+  embarrassingly parallel multi-day pod-scale job, so finished row blocks
+  are checkpointed and a preempted build resumes where it left off;
+- **save/load**: versioned persistence on the repo's
+  :class:`repro.checkpoint.Checkpointer` (atomic commit, per-leaf .npy +
+  manifest, elastic re-sharding on restore);
+- **shard**: :meth:`AnchorIndex.shard` places the item axis over a mesh via
+  ``distributed/sharding.py`` rules; :meth:`AnchorIndex.topk` then runs
+  under ``shard_map`` — the engine's fused ``approx_topk`` per shard with a
+  cross-shard top-k merge, so no shard ever materializes global scores;
+- **mutate**: :meth:`add_items` / :meth:`remove_items` support dynamic
+  corpora through *padded capacity* plus the engine's ``n_valid`` bound —
+  array shapes never change, so corpus mutation never retraces the search.
+
+Retrievers consume the artifact through ``Retriever.from_index`` (see
+``core/engine.py``); the item axis of the index is addressed by *position*,
+with ``item_ids`` mapping positions to external corpus ids (the engine
+applies the map before every cross-encoder call).
 """
 
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import json
 import os
 from dataclasses import dataclass
-from typing import Callable, Optional
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..checkpoint.checkpointer import Checkpointer
+from ..compat import shard_map
+from ..distributed import sharding
+from ..kernels.approx_topk.ops import approx_topk_op
+from . import cur
 
 # bulk_score_fn(query_ids (Q,), item_ids (N,)) -> (Q, N) exact scores
 BulkScoreFn = Callable[[jax.Array, jax.Array], jax.Array]
 
-
-@dataclass
-class IndexMeta:
-    k_q: int
-    n_items: int
-    block_rows: int
-    done_blocks: list
+INDEX_FORMAT_VERSION = 1
+_META_FILE = "index_meta.json"
+_CKPT_STEP = 0
 
 
 def build_r_anc(
@@ -43,11 +67,18 @@ def build_r_anc(
 
     Each row block is one jit'd bulk scoring call; with a checkpoint dir the
     block results are persisted (.npy) plus a manifest, and finished blocks
-    are skipped on restart.
+    are skipped on restart.  A manifest whose ``k_q``/``n_items``/
+    ``block_rows`` — or whose anchor-query/item *id content* (fingerprinted)
+    — does not match the current call is stale, so it is discarded (with its
+    block files) rather than silently reused.  A changed *scorer* over
+    identical ids is undetectable; use a fresh checkpoint_dir per model.
     """
     k_q = int(anchor_query_ids.shape[0])
     n_items = int(item_ids.shape[0])
     n_blocks = (k_q + block_rows - 1) // block_rows
+    ids_fp = hashlib.sha256(
+        np.asarray(anchor_query_ids).tobytes() + b"|" + np.asarray(item_ids).tobytes()
+    ).hexdigest()[:16]
 
     done = set()
     manifest_path = None
@@ -57,8 +88,16 @@ def build_r_anc(
         if os.path.exists(manifest_path):
             with open(manifest_path) as f:
                 meta = json.load(f)
-            if meta["k_q"] == k_q and meta["n_items"] == n_items:
+            if (
+                meta.get("k_q") == k_q
+                and meta.get("n_items") == n_items
+                and meta.get("block_rows") == block_rows
+                and meta.get("ids_fingerprint") == ids_fp
+            ):
                 done = set(meta["done_blocks"])
+            else:
+                # stale manifest: blocks cover different rows or different ids
+                clear_build_checkpoints(checkpoint_dir)
 
     rows = []
     for blk in range(n_blocks):
@@ -84,9 +123,471 @@ def build_r_anc(
                         "k_q": k_q,
                         "n_items": n_items,
                         "block_rows": block_rows,
+                        "ids_fingerprint": ids_fp,
                         "done_blocks": sorted(done),
                     },
                     f,
                 )
             os.replace(tmp, manifest_path)  # atomic commit
     return jnp.concatenate(rows, axis=0)
+
+
+def clear_build_checkpoints(checkpoint_dir: str) -> None:
+    """Drop :func:`build_r_anc`'s row-block checkpoints + manifest — called
+    on stale-manifest invalidation and after the built index has been
+    committed via :meth:`AnchorIndex.save` (the blocks are superseded)."""
+    for name in os.listdir(checkpoint_dir):
+        if name.startswith("ranc_block_") and name.endswith(".npy"):
+            os.remove(os.path.join(checkpoint_dir, name))
+    manifest = os.path.join(checkpoint_dir, "manifest.json")
+    if os.path.exists(manifest):
+        os.remove(manifest)
+
+
+def _pad_axis(x: jax.Array, axis: int, target: int, fill) -> jax.Array:
+    n = x.shape[axis]
+    if n == target:
+        return x
+    if n > target:
+        raise ValueError(f"cannot shrink axis {axis} from {n} to {target}")
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - n)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=(
+        "r_anc", "anchor_query_ids", "item_ids", "n_valid",
+        "anchor_item_pos", "u", "item_embeddings",
+    ),
+    meta_fields=(),
+)
+@dataclass
+class AnchorIndex:
+    """The offline artifact every retriever consumes.
+
+    The item axis is padded to ``capacity``; positions ``[0, n_valid)`` hold
+    real items (column ``j`` of ``r_anc`` scores item ``item_ids[j]``) and
+    the tail holds exact-zero columns with ``item_ids == -1``.  All methods
+    are functional — they return a new ``AnchorIndex`` and never resize an
+    array, so a retriever holding a mutated index never retraces.
+    """
+
+    r_anc: jax.Array                 # (k_q, capacity) anchor-query scores
+    anchor_query_ids: jax.Array      # (k_q,) int32 anchor query ids
+    item_ids: jax.Array              # (capacity,) int32 external ids, -1 padding
+    n_valid: jax.Array               # () int32 number of real items
+    # optional precomputed ANNCUR latents (arXiv 2210.12579)
+    anchor_item_pos: Optional[jax.Array] = None  # (k_i,) anchor item positions
+    u: Optional[jax.Array] = None                # (k_i, k_q) pinv(R_anc[:, I_anc])
+    item_embeddings: Optional[jax.Array] = None  # (k_i, capacity) = U @ R_anc
+
+    # ---- shape/metadata accessors -----------------------------------------
+
+    @property
+    def k_q(self) -> int:
+        return self.r_anc.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.r_anc.shape[1]
+
+    @property
+    def n_items(self) -> int:
+        """Concrete valid-item count (host-side; do not call under a trace)."""
+        return int(self.n_valid)
+
+    @property
+    def has_latents(self) -> bool:
+        return self.item_embeddings is not None
+
+    def valid_mask(self) -> jax.Array:
+        """(capacity,) bool — True on real item positions."""
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.n_valid
+
+    def gather_item_ids(self, pos: jax.Array) -> jax.Array:
+        """Map engine positions (e.g. ``result.topk_idx``) to external ids."""
+        return jnp.take(self.item_ids, pos, axis=0)
+
+    # ---- construction ------------------------------------------------------
+
+    @classmethod
+    def from_r_anc(
+        cls,
+        r_anc: jax.Array,
+        anchor_query_ids: Optional[jax.Array] = None,
+        item_ids: Optional[jax.Array] = None,
+        capacity: Optional[int] = None,
+    ) -> "AnchorIndex":
+        """Wrap a dense (k_q, N) score matrix, padding the item axis to
+        ``capacity`` (defaults to N — no mutation headroom)."""
+        k_q, n = r_anc.shape
+        capacity = n if capacity is None else int(capacity)
+        if capacity < n:
+            raise ValueError(f"capacity={capacity} < n_items={n}")
+        if anchor_query_ids is None:
+            anchor_query_ids = jnp.arange(k_q, dtype=jnp.int32)
+        if item_ids is None:
+            item_ids = jnp.arange(n, dtype=jnp.int32)
+        if item_ids.shape[0] != n:
+            raise ValueError(f"item_ids {item_ids.shape} != n_items {n}")
+        return cls(
+            r_anc=_pad_axis(jnp.asarray(r_anc), 1, capacity, 0),
+            anchor_query_ids=jnp.asarray(anchor_query_ids, jnp.int32),
+            item_ids=_pad_axis(jnp.asarray(item_ids, jnp.int32), 0, capacity, -1),
+            n_valid=jnp.asarray(n, jnp.int32),
+        )
+
+    @classmethod
+    def build(
+        cls,
+        bulk_score_fn: BulkScoreFn,
+        anchor_query_ids: jax.Array,
+        item_ids: jax.Array,
+        block_rows: int = 64,
+        checkpoint_dir: Optional[str] = None,
+        capacity: Optional[int] = None,
+    ) -> "AnchorIndex":
+        """The offline indexing job: block-streamed, resumable R_anc build."""
+        r_anc = build_r_anc(
+            bulk_score_fn, anchor_query_ids, item_ids,
+            block_rows=block_rows, checkpoint_dir=checkpoint_dir,
+        )
+        return cls.from_r_anc(
+            r_anc, anchor_query_ids=anchor_query_ids, item_ids=item_ids,
+            capacity=capacity,
+        )
+
+    def with_capacity(self, capacity: int) -> "AnchorIndex":
+        """Re-pad the item axis (must still hold all ``n_valid`` items)."""
+        n = self.n_items
+        if capacity < n:
+            raise ValueError(f"capacity={capacity} < n_valid={n}")
+        emb = self.item_embeddings
+        return dataclasses.replace(
+            self,
+            r_anc=_pad_axis(self.r_anc[:, :n], 1, capacity, 0),
+            item_ids=_pad_axis(self.item_ids[:n], 0, capacity, -1),
+            item_embeddings=(
+                None if emb is None else _pad_axis(emb[:, :n], 1, capacity, 0)
+            ),
+        )
+
+    # ---- ANNCUR latents ----------------------------------------------------
+
+    def with_anchors(
+        self,
+        k_anchor: Optional[int] = None,
+        key: Optional[jax.Array] = None,
+        anchor_pos: Optional[jax.Array] = None,
+    ) -> "AnchorIndex":
+        """Fix the ANNCUR anchor item *positions* (uniform over the valid
+        prefix unless given) without computing latents — all the engine's
+        ``ANNCURRetriever.from_index`` needs."""
+        if anchor_pos is None:
+            if key is None or k_anchor is None:
+                raise ValueError("need (k_anchor, key) or explicit anchor_pos")
+            anchor_pos = jax.random.choice(
+                key, self.n_items, shape=(k_anchor,), replace=False
+            )
+        return dataclasses.replace(
+            self, anchor_item_pos=jnp.asarray(anchor_pos, jnp.int32),
+            u=None, item_embeddings=None,
+        )
+
+    def with_latents(
+        self,
+        k_anchor: Optional[int] = None,
+        key: Optional[jax.Array] = None,
+        anchor_pos: Optional[jax.Array] = None,
+        rcond: float = 1e-6,
+    ) -> "AnchorIndex":
+        """:meth:`with_anchors` plus the precomputed ANNCUR pieces:
+        ``U = pinv(R_anc[:, I_anc])`` and the latent item embeddings
+        ``E_I = U @ R_anc`` (what :meth:`topk` searches over)."""
+        idx = self.with_anchors(k_anchor=k_anchor, key=key, anchor_pos=anchor_pos)
+        u = cur.pinv(idx.r_anc[:, idx.anchor_item_pos], rcond)   # (k_i, k_q)
+        return dataclasses.replace(
+            idx, u=u, item_embeddings=u @ idx.r_anc
+        )
+
+    def query_embedding(self, c_anchor: jax.Array) -> jax.Array:
+        """(B, k_i) exact anchor scores -> (B, k_q) latent query embedding."""
+        if self.u is None:
+            raise ValueError("index has no latents; call with_latents() first")
+        return c_anchor @ self.u
+
+    # ---- dynamic corpus (padded capacity + n_valid, shapes never change) ---
+
+    def add_items(
+        self,
+        new_item_ids: jax.Array,
+        cols: Optional[jax.Array] = None,
+        bulk_score_fn: Optional[BulkScoreFn] = None,
+    ) -> "AnchorIndex":
+        """Append items into the padded tail.  ``cols`` is the (k_q, n_new)
+        exact score block (computed via ``bulk_score_fn`` when omitted);
+        latent item embeddings extend incrementally (``U`` is unchanged —
+        the anchor columns are untouched).  Host-side offline op."""
+        new_item_ids = jnp.asarray(new_item_ids, jnp.int32)
+        n_new = int(new_item_ids.shape[0])
+        n0 = self.n_items
+        if n0 + n_new > self.capacity:
+            raise ValueError(
+                f"add_items overflows capacity {self.capacity} "
+                f"({n0} + {n_new}); rebuild via with_capacity() first"
+            )
+        new_host = np.asarray(new_item_ids)
+        if (new_host < 0).any():
+            raise ValueError("add_items: item ids must be >= 0 (-1 is the padding sentinel)")
+        if np.unique(new_host).size != n_new:
+            raise ValueError("add_items: duplicate item ids in the new batch")
+        if np.intersect1d(new_host, np.asarray(self.item_ids[: n0])).size:
+            raise ValueError("add_items: some item ids already in the index")
+        if cols is None:
+            if bulk_score_fn is None:
+                raise ValueError("need cols or bulk_score_fn")
+            cols = bulk_score_fn(self.anchor_query_ids, new_item_ids)
+        cols = jnp.asarray(cols, self.r_anc.dtype)
+        if cols.shape != (self.k_q, n_new):
+            raise ValueError(f"cols {cols.shape} != ({self.k_q}, {n_new})")
+        emb = self.item_embeddings
+        return dataclasses.replace(
+            self,
+            r_anc=jax.lax.dynamic_update_slice(self.r_anc, cols, (0, n0)),
+            item_ids=jax.lax.dynamic_update_slice(self.item_ids, new_item_ids, (n0,)),
+            n_valid=jnp.asarray(n0 + n_new, jnp.int32),
+            item_embeddings=(
+                None if emb is None
+                else jax.lax.dynamic_update_slice(emb, self.u @ cols, (0, n0))
+            ),
+        )
+
+    def remove_items(self, remove_item_ids: jax.Array) -> "AnchorIndex":
+        """Drop items by external id via *stable compaction*: surviving
+        columns keep their relative order (so a removal is bit-identical to a
+        from-scratch rebuild over the survivors), freed slots join the padded
+        tail, and shapes never change.  Host-side offline op."""
+        cap = self.capacity
+        rm = self.valid_mask() & jnp.isin(
+            self.item_ids, jnp.asarray(remove_item_ids, jnp.int32)
+        )
+        if self.anchor_item_pos is not None and bool(rm[self.anchor_item_pos].any()):
+            raise ValueError(
+                "remove_items would drop an ANNCUR anchor item; rebuild the "
+                "latents (with_latents) with a surviving anchor set first"
+            )
+        perm = jnp.argsort(rm.astype(jnp.int32), stable=True)  # survivors first, in order
+        n1 = self.n_items - int(rm.sum())
+        keep = jnp.arange(cap, dtype=jnp.int32) < n1
+        emb = self.item_embeddings
+        new = dataclasses.replace(
+            self,
+            r_anc=jnp.where(keep[None, :], self.r_anc[:, perm], 0),
+            item_ids=jnp.where(keep, self.item_ids[perm], -1),
+            n_valid=jnp.asarray(n1, jnp.int32),
+            item_embeddings=(
+                None if emb is None else jnp.where(keep[None, :], emb[:, perm], 0)
+            ),
+        )
+        if self.anchor_item_pos is not None:
+            inv = jnp.argsort(perm)                  # old position -> new
+            new = dataclasses.replace(
+                new, anchor_item_pos=inv[self.anchor_item_pos].astype(jnp.int32)
+            )
+        return new
+
+    # ---- persistence (versioned, on the Checkpointer machinery) ------------
+
+    def _tree(self) -> dict:
+        t = {
+            "r_anc": self.r_anc,
+            "anchor_query_ids": self.anchor_query_ids,
+            "item_ids": self.item_ids,
+            "n_valid": self.n_valid,
+        }
+        if self.anchor_item_pos is not None:
+            t["anchor_item_pos"] = self.anchor_item_pos
+        if self.has_latents:
+            t.update(u=self.u, item_embeddings=self.item_embeddings)
+        return t
+
+    def save(self, path: str) -> None:
+        """Persist atomically under ``path`` (Checkpointer layout: one .npy
+        per leaf + manifest with each leaf's save-time PartitionSpec, so a
+        pod-scale index restores elastically onto any mesh)."""
+        tree = self._tree()
+
+        def leaf_spec(x, default: P) -> P:
+            # record the ACTUAL placement of a sharded leaf; unsharded
+            # leaves get the canonical default so a later load(mesh) still
+            # distributes the item axis
+            sh = getattr(x, "sharding", None)
+            if isinstance(sh, NamedSharding) and sh.mesh.size > 1:
+                return sh.spec
+            return default
+
+        defaults = {
+            "r_anc": P(None, "data"),
+            "anchor_query_ids": P(),
+            "item_ids": P("data"),
+            "n_valid": P(),
+            "anchor_item_pos": P(),
+            "u": P(),
+            "item_embeddings": P(None, "data"),
+        }
+        specs = {k: leaf_spec(v, defaults[k]) for k, v in tree.items()}
+        ck = Checkpointer(path, async_save=False)
+        ck.save(_CKPT_STEP, tree, specs)
+        meta = {
+            "format_version": INDEX_FORMAT_VERSION,
+            "k_q": self.k_q,
+            "capacity": self.capacity,
+            "n_items": self.n_items,
+            "dtype": str(self.r_anc.dtype),
+            "has_latents": self.has_latents,
+        }
+        tmp = os.path.join(path, _META_FILE + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, os.path.join(path, _META_FILE))
+
+    @classmethod
+    def load(cls, path: str, mesh: Optional[Mesh] = None) -> "AnchorIndex":
+        """Load a saved index; with a mesh, leaves are device_put with their
+        save-time specs re-resolved on the new mesh (elastic restore)."""
+        meta_path = os.path.join(path, _META_FILE)
+        if not os.path.exists(meta_path):
+            raise FileNotFoundError(f"no AnchorIndex at {path!r} ({_META_FILE} missing)")
+        with open(meta_path) as f:
+            meta = json.load(f)
+        if meta.get("format_version") != INDEX_FORMAT_VERSION:
+            raise ValueError(
+                f"unsupported AnchorIndex format version {meta.get('format_version')} "
+                f"(this build reads version {INDEX_FORMAT_VERSION})"
+            )
+        with open(os.path.join(path, f"step_{_CKPT_STEP}", "manifest.json")) as f:
+            manifest = json.load(f)
+        like = {
+            k: jax.ShapeDtypeStruct(tuple(v["shape"]), np.dtype(v["dtype"]))
+            for k, v in manifest["leaves"].items()
+        }
+        tree = Checkpointer(path, async_save=False).restore(_CKPT_STEP, like, mesh=mesh)
+        return cls(**tree)
+
+    # ---- sharding + sharded search -----------------------------------------
+
+    def shard(self, mesh: Mesh, rules=None) -> "AnchorIndex":
+        """Place the item axis over ``mesh`` (capacity is re-padded to a
+        shardable multiple if needed).  The placement lives in the arrays'
+        own ``NamedSharding`` — it survives mutation (`add_items` etc.) and
+        pytree ops — and :meth:`topk` reads it back to search under
+        ``shard_map``."""
+        idx = self
+        if idx.capacity % mesh.size:
+            idx = idx.with_capacity(-(-idx.capacity // mesh.size) * mesh.size)
+        spec = sharding.spec_for(
+            mesh, ("anchor_q", "items"), (idx.k_q, idx.capacity), rules
+        )
+        item_axes = spec[1] if len(spec) > 1 else None
+        if item_axes is None:
+            raise ValueError(
+                f"capacity {idx.capacity} not shardable over mesh {dict(mesh.shape)}"
+            )
+        axes = (item_axes,) if isinstance(item_axes, str) else tuple(item_axes)
+
+        def put(x, s):
+            return jax.device_put(x, NamedSharding(mesh, s))
+
+        emb = idx.item_embeddings
+        out = dataclasses.replace(
+            idx,
+            r_anc=put(idx.r_anc, P(None, axes)),
+            anchor_query_ids=put(idx.anchor_query_ids, P()),
+            item_ids=put(idx.item_ids, P(axes)),
+            n_valid=put(idx.n_valid, P()),
+            item_embeddings=None if emb is None else put(emb, P(None, axes)),
+        )
+        if idx.anchor_item_pos is not None:
+            out = dataclasses.replace(
+                out,
+                anchor_item_pos=put(idx.anchor_item_pos, P()),
+                u=put(idx.u, P()),
+            )
+        return out
+
+    def _item_sharding(self) -> Tuple[Optional[Mesh], Optional[Tuple[str, ...]]]:
+        """(mesh, item axes) read back from ``r_anc``'s NamedSharding, or
+        (None, None) when the item axis is unsharded/replicated."""
+        sh = getattr(self.r_anc, "sharding", None)
+        if not isinstance(sh, NamedSharding) or sh.mesh.size == 1:
+            return None, None
+        spec = sh.spec
+        item_axes = spec[1] if len(spec) > 1 else None
+        if item_axes is None:
+            return None, None
+        axes = (item_axes,) if isinstance(item_axes, str) else tuple(item_axes)
+        return sh.mesh, axes
+
+    def topk(
+        self,
+        e_q: jax.Array,
+        k: int,
+        *,
+        mesh: Optional[Mesh] = None,
+        item_axes: Optional[Tuple[str, ...]] = None,
+        tile: int = 512,
+        interpret: bool = True,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Top-k of ``e_q @ R_anc`` over *valid* items -> (vals, positions).
+
+        On a sharded index (``shard(mesh)``, ``load(path, mesh)``, or
+        explicit mesh/item_axes) each shard runs the fused ``approx_topk``
+        over its local item slab — global (B, N) scores are never
+        materialized anywhere — and the per-shard candidates are merged with
+        an all-gather + top-k (the cross-shard merge is over n_shards·k
+        entries, ≪ N).  The placement is detected from ``r_anc``'s
+        ``NamedSharding``, so mutated/replaced indices keep their path.
+        """
+        if mesh is None and item_axes is None:
+            mesh, item_axes = self._item_sharding()
+        invalid = ~self.valid_mask()
+        b = e_q.shape[0]
+        if mesh is None:
+            mask = jnp.broadcast_to(invalid[None, :], (b, self.capacity))
+            return approx_topk_op(
+                e_q, self.r_anc, None, k, tile=tile, interpret=interpret, mask=mask
+            )
+        axes = item_axes
+        if axes is None:
+            raise ValueError("sharded topk needs item_axes alongside mesh")
+        n_shards = 1
+        for a in axes:
+            n_shards *= mesh.shape[a]
+        n_local = self.capacity // n_shards
+        if k > n_local:
+            raise ValueError(f"k={k} > per-shard items {n_local}")
+
+        def body(eq, r_local, inv_local):
+            shard_id = jnp.int32(0)
+            for a in axes:
+                shard_id = shard_id * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+            mask = jnp.broadcast_to(inv_local[None, :], (eq.shape[0], n_local))
+            v, i = approx_topk_op(
+                eq, r_local, None, k, tile=min(tile, n_local),
+                interpret=interpret, mask=mask,
+            )
+            gi = i + shard_id * n_local
+            vg = jax.lax.all_gather(v, axes, axis=1, tiled=True)   # (B, S*k)
+            ig = jax.lax.all_gather(gi, axes, axis=1, tiled=True)
+            vt, pos = jax.lax.top_k(vg, k)
+            return vt, jnp.take_along_axis(ig, pos, axis=1)
+
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(None, axes), P(axes)),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+        return fn(e_q, self.r_anc, invalid)

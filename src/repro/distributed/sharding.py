@@ -42,6 +42,10 @@ DEFAULT_RULES: Dict[str, Sequence[Axes]] = {
     "unit": (None,),
     # recsys
     "table_rows": (("pod", "data", "model"), ("data", "model"), ("data",)),
+    # retrieval (AnchorIndex): the item axis spreads over the whole mesh,
+    # the small anchor-query axis replicates
+    "items": (("pod", "data", "model"), ("data", "model"), ("data",), ("model",)),
+    "anchor_q": (None,),
     "mlp_in": ("data",),
     "mlp_out": ("model",),
     "interest": (None,),

@@ -2,7 +2,9 @@
 
 The production serving loop the paper's technique plugs into:
 
-- an offline ``R_anc`` index (built by repro.core.index, checkpointed);
+- an offline :class:`repro.core.index.AnchorIndex` artifact (built by the
+  resumable block-streaming job, persisted/loaded from disk, mutable at
+  runtime via ``add_items``/``remove_items`` without retracing);
 - any :class:`repro.core.engine.Retriever` behind the unified search API —
   the default is :class:`AdaCURRetriever` on the static-shape round engine
   (``loop_mode='fori'``), so per-batch round-count overrides do not retrace;
@@ -12,22 +14,30 @@ The production serving loop the paper's technique plugs into:
   ``poll`` even if no further request ever arrives;
 - per-request k-NN results with exact CE scores.
 
-CLI:  PYTHONPATH=src python -m repro.launch.serve --requests 64
+CLI:  PYTHONPATH=src python -m repro.launch.serve --requests 64 \
+          --retriever {adacur,anncur,rerank} [--index-path DIR]
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import AdaCURConfig
-from ..core.engine import AdaCURRetriever, Retriever
+from ..core.engine import (
+    AdaCURRetriever,
+    ANNCURRetriever,
+    RerankRetriever,
+    Retriever,
+)
+from ..core.index import AnchorIndex, clear_build_checkpoints
 
 
 @dataclass
@@ -46,7 +56,14 @@ class RetrievalResponse:
 
 
 class AdaCURService:
-    """Batched retrieval over a fixed item corpus via any Retriever."""
+    """Batched retrieval over an AnchorIndex via any Retriever.
+
+    The offline side always enters through the :class:`AnchorIndex`
+    artifact: pass one directly (or an on-disk index path), or pass a bare
+    ``r_anc`` score matrix and the service wraps it.  Swap in a mutated
+    index between batches with :meth:`swap_index` — capacity-padded shapes
+    mean the compiled search is reused as-is.
+    """
 
     def __init__(
         self,
@@ -57,16 +74,43 @@ class AdaCURService:
         max_wait_s: float = 0.01,
         seed: int = 0,
         retriever: Optional[Retriever] = None,
+        index: Optional[Union[AnchorIndex, str, os.PathLike]] = None,
+        candidate_fn: Optional[Callable] = None,
     ):
+        if index is not None and not isinstance(index, AnchorIndex):
+            index = AnchorIndex.load(os.fspath(index))
         if retriever is None:
-            if score_fn is None or r_anc is None or cfg is None:
-                raise ValueError("need (score_fn, r_anc, cfg) or a retriever")
-            retriever = AdaCURRetriever(score_fn, r_anc, cfg)
+            if index is None:
+                if score_fn is None or r_anc is None or cfg is None:
+                    raise ValueError(
+                        "need an index (AnchorIndex or path), (score_fn, r_anc, "
+                        "cfg), or a retriever"
+                    )
+                index = AnchorIndex.from_r_anc(r_anc)
+            if score_fn is None or cfg is None:
+                raise ValueError("need score_fn and cfg to build the retriever")
+            retriever = AdaCURRetriever.from_index(index, score_fn, cfg)
+        elif index is None:
+            index = getattr(retriever, "index", None)
         self.retriever = retriever
+        self.index = index
+        self.candidate_fn = candidate_fn    # qids (B,) -> (B, M) first-stage order
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self._key = jax.random.PRNGKey(seed)
         self._pending: List[RetrievalRequest] = []
+
+    def swap_index(self, index: AnchorIndex) -> None:
+        """Serve a mutated (add/remove) index from the next batch on.  The
+        index's capacity-constant shapes mean no recompilation happens."""
+        if getattr(self.retriever, "index", None) is None:
+            raise ValueError(
+                "swap_index needs an index-backed retriever (Retriever."
+                "from_index); this retriever was built on a bare r_anc and "
+                "would keep searching the old scores"
+            )
+        self.index = index
+        self.retriever.index = index
 
     def _due(self) -> bool:
         if not self._pending:
@@ -95,20 +139,59 @@ class AdaCURService:
         batch, self._pending = self._pending[: self.max_batch], self._pending[self.max_batch :]
         qids = jnp.asarray([r.query_id for r in batch])
         self._key, sub = jax.random.split(self._key)
-        res = self.retriever.search(qids, sub)
+        kw = {}
+        if self.candidate_fn is not None:
+            kw["candidate_idx"] = self.candidate_fn(qids)
+        res = self.retriever.search(qids, sub, **kw)
         res = jax.block_until_ready(res)
+        # single source of truth: an index-backed retriever may have been
+        # mutated directly (retriever.index = ...), so map positions through
+        # ITS index, not a possibly-stale service copy
+        idx = getattr(self.retriever, "index", None)
+        if idx is None:
+            idx = self.index
+        item_ids = (
+            np.asarray(idx.gather_item_ids(res.topk_idx))
+            if idx is not None else np.asarray(res.topk_idx)
+        )
         out = []
         for i, r in enumerate(batch):
             out.append(
                 RetrievalResponse(
                     query_id=r.query_id,
-                    item_ids=np.asarray(res.topk_idx[i]),
+                    item_ids=item_ids[i],
                     scores=np.asarray(res.topk_scores[i]),
                     latency_s=time.monotonic() - r.arrival_t,
                     ce_calls=res.ce_calls,
                 )
             )
         return out
+
+
+def make_retriever(
+    kind: str,
+    index: AnchorIndex,
+    score_fn: Callable,
+    cfg: AdaCURConfig,
+    anchor_key: Optional[jax.Array] = None,
+) -> Retriever:
+    """CLI retriever factory: every method consumes the same AnchorIndex."""
+    if kind == "adacur":
+        return AdaCURRetriever.from_index(index, score_fn, cfg)
+    if kind == "anncur":
+        if index.anchor_item_pos is None:
+            index = index.with_anchors(
+                k_anchor=cfg.k_anchor,
+                key=anchor_key if anchor_key is not None else jax.random.PRNGKey(2),
+            )
+        return ANNCURRetriever.from_index(
+            index, score_fn, budget_ce=cfg.budget_ce, k_retrieve=cfg.k_retrieve
+        )
+    if kind == "rerank":
+        return RerankRetriever.from_index(
+            index, score_fn, budget_ce=cfg.budget_ce, k_retrieve=cfg.k_retrieve
+        )
+    raise ValueError(f"unknown retriever '{kind}' (adacur|anncur|rerank)")
 
 
 def main() -> None:
@@ -120,20 +203,58 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--fused", action="store_true",
                     help="fused Pallas score->top-k sampling")
+    ap.add_argument("--retriever", choices=("adacur", "anncur", "rerank"),
+                    default="adacur", help="search method over the index")
+    ap.add_argument("--index-path", default=None,
+                    help="AnchorIndex directory: loaded when present, else "
+                         "built once and saved there")
     args = ap.parse_args()
 
     from ..data.synthetic import make_synthetic_ce
 
-    print(f"building synthetic CE domain (|I|={args.n_items}) + R_anc index...")
+    index = None
+    if args.index_path and os.path.exists(
+        os.path.join(args.index_path, "index_meta.json")
+    ):
+        print(f"loading AnchorIndex from {args.index_path}...")
+        index = AnchorIndex.load(args.index_path)
+        if index.n_items != args.n_items:
+            print(f"  index holds {index.n_items} items; overriding "
+                  f"--n-items {args.n_items} to match")
+            args.n_items = index.n_items
+
+    print(f"building synthetic CE domain (|I|={args.n_items})...")
     ce = make_synthetic_ce(jax.random.PRNGKey(0), n_queries=600, n_items=args.n_items)
-    r_anc = ce.full_matrix(jnp.arange(500))
+
+    if index is None:
+        print("building AnchorIndex (block-streamed, resumable)...")
+        index = AnchorIndex.build(
+            ce.score_block, jnp.arange(500), jnp.arange(args.n_items),
+            block_rows=128, checkpoint_dir=args.index_path,
+        )
+        if args.index_path:
+            index.save(args.index_path)
+            # the committed artifact supersedes the row-block checkpoints
+            clear_build_checkpoints(args.index_path)
+            print(f"saved AnchorIndex to {args.index_path}")
 
     cfg = AdaCURConfig(
         k_anchor=args.budget // 2, n_rounds=args.rounds, budget_ce=args.budget,
         strategy="topk", k_retrieve=100, loop_mode="fori",
         use_fused_topk=args.fused,
     )
-    svc = AdaCURService(ce.score_fn(), r_anc, cfg, max_batch=args.batch)
+    retriever = make_retriever(args.retriever, index, ce.score_fn(), cfg)
+    candidate_fn = None
+    if args.retriever == "rerank":
+        # stand-in first-stage retriever: dual-encoder dot-product order
+        def candidate_fn(qids):
+            scores = ce.q_emb[qids] @ ce.i_emb.T
+            _, order = jax.lax.top_k(scores, cfg.budget_ce)
+            return order
+
+    svc = AdaCURService(
+        retriever=retriever, max_batch=args.batch, candidate_fn=candidate_fn
+    )
 
     served = []
     rng = np.random.default_rng(0)
@@ -144,7 +265,8 @@ def main() -> None:
     served += svc.flush()
     lat = np.array([r.latency_s for r in served])
     print(
-        f"served {len(served)} requests | p50={np.percentile(lat, 50)*1e3:.1f}ms "
+        f"[{args.retriever}] served {len(served)} requests | "
+        f"p50={np.percentile(lat, 50)*1e3:.1f}ms "
         f"p99={np.percentile(lat, 99)*1e3:.1f}ms | "
         f"{cfg.budget_ce} CE calls/request (vs {args.n_items} brute force = "
         f"{args.n_items / cfg.budget_ce:.0f}x fewer)"
