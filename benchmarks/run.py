@@ -27,6 +27,7 @@ def main() -> None:
         pinv_incremental,
         recall_budget,
         rounds_sweep,
+        scorer_throughput,
     )
 
     if args.fast:
@@ -48,6 +49,10 @@ def main() -> None:
             "index_build (offline lifecycle)",
             (lambda: index_build.run(n_items=2000, k_q=64, block_rows=16))
             if args.fast else index_build.run,
+        ),
+        (
+            "scorer_throughput (CE bucketing + score cache)",
+            lambda: scorer_throughput.run(fast=args.fast),
         ),
     ]
     failed = 0

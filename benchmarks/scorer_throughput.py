@@ -1,0 +1,156 @@
+"""Scorer subsystem benchmark -> BENCH_scorer.json.
+
+Three claims, measured rather than assumed:
+
+- **real-CE throughput**: pairs/s through the bucketed micro-batching
+  CrossEncoderScorer (flash-attention path, interpret-mode Pallas on CPU);
+- **zero retraces**: after warmup, sweeping request shapes (batch, k) and
+  serving-bucket batch sizes compiles nothing new — the static shape set
+  absorbs every call;
+- **cache effectiveness**: with the (query, item) score cache, a repeated
+  query batch (batch >= 64) re-issues <= 50% of the cold CE calls — the
+  acceptance bar; with a pinned trajectory it is exactly 0%.
+
+CLI:  PYTHONPATH=src python -m benchmarks.scorer_throughput [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AdaCURConfig, replace
+from repro.configs.registry import CE_TINY
+from repro.core import engine
+from repro.core.scorer import CachingScorer, CrossEncoderScorer, TabulatedScorer
+from repro.data.synthetic import make_synthetic_ce, make_zeshel_like
+from repro.models import cross_encoder
+
+from .common import emit, timed
+
+
+def bench_cross_encoder(fast: bool) -> dict:
+    """Bucketed real-CE scoring: throughput + the no-retrace sweep."""
+    n_items = 200 if fast else 500
+    ds = make_zeshel_like(0, n_items=n_items, n_queries=80, item_len=12,
+                          query_len=8)
+    lm_cfg = replace(
+        CE_TINY, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=ds.vocab_size, dtype="float32", remat=False,
+    )
+    params, _ = cross_encoder.init_cross_encoder(jax.random.PRNGKey(0), lm_cfg)
+    micro = 32 if fast else 64
+    sc = CrossEncoderScorer(
+        params, lm_cfg, ds.pair_tokens, micro_batch=micro,
+        len_buckets=(32, 64), flash_block=(32, 32),
+    )
+
+    b, k = (64, 2) if fast else (64, 4)
+    rng = np.random.default_rng(0)
+
+    def call(bb, kk):
+        q = rng.integers(0, 80, size=bb)
+        idx = rng.integers(0, n_items, size=(bb, kk))
+        return sc._host(q, idx)
+
+    call(b, k)                                  # warmup: compiles the bucket
+    n_warm = sc.n_traces
+    _, us = timed(lambda: call(b, k), n_iter=2)
+    pairs_per_s = b * k / (us / 1e6)
+    emit(f"scorer/cross_encoder/B{b}xK{k}", us,
+         f"pairs_per_s={pairs_per_s:.0f};micro_batch={micro}")
+
+    # request-shape sweep: every (B, k) lands in the same compiled shapes
+    for bb, kk in ((1, 1), (7, 5), (16, 3), (64, 2), (33, k)):
+        call(bb, kk)
+    retraces = sc.n_traces - n_warm
+    emit("scorer/cross_encoder/shape_sweep_retraces", 0.0,
+         f"retraces={retraces};traces_total={sc.n_traces}")
+    return {
+        "pairs_per_s": pairs_per_s,
+        "micro_batch": micro,
+        "len_buckets": list(sc.len_buckets),
+        "traces_after_warmup": n_warm,
+        "retraces_after_shape_sweep": retraces,
+        "batch": b,
+    }
+
+
+def bench_cache(fast: bool) -> dict:
+    """Cold vs repeat engine searches at serving batch size through the
+    (query, item) score cache (tabulated inner model: measures the cache
+    machinery, not the CE's FLOPs)."""
+    n_items = 2000 if fast else 10000
+    batch = 64
+    n_q = 500 + batch
+    ce = make_synthetic_ce(jax.random.PRNGKey(0), n_queries=n_q, n_items=n_items)
+    m = np.asarray(ce.full_matrix(jnp.arange(n_q)))
+    cache = CachingScorer(TabulatedScorer(m))
+    cfg = AdaCURConfig(
+        k_anchor=50, n_rounds=5, budget_ce=100, k_retrieve=50, loop_mode="fori"
+    )
+    run = engine.make_engine(cache, cfg)
+    r_anc = jnp.asarray(m[:500])
+    q = jnp.arange(500, 500 + batch)
+    key = jax.random.PRNGKey(3)
+
+    _, cold_us = timed(lambda: run(r_anc, q, key))
+    cold = cache.stats.ce_calls
+    _, warm_us = timed(lambda: run(r_anc, q, key))
+    repeat = cache.stats.ce_calls - cold
+    ratio = repeat / cold if cold else 0.0
+    emit(f"scorer/cache/cold_B{batch}", cold_us,
+         f"ce_calls={cold};plan={engine.ce_call_plan(cfg) * batch}")
+    emit(f"scorer/cache/repeat_B{batch}", warm_us,
+         f"ce_calls={repeat};repeat_over_cold={ratio:.3f};"
+         f"hits={cache.stats.cache_hits}")
+    return {
+        "batch": batch,
+        "cold_ce_calls": cold,
+        "repeat_ce_calls": repeat,
+        "repeat_over_cold": ratio,
+        "cache_hits": cache.stats.cache_hits,
+        "cold_us": cold_us,
+        "repeat_us": warm_us,
+    }
+
+
+def bench_tabulated(fast: bool) -> dict:
+    n_items = 2000 if fast else 10000
+    m = np.random.default_rng(0).normal(size=(256, n_items)).astype(np.float32)
+    tab = TabulatedScorer(m)
+    q = jnp.arange(64)
+    idx = jnp.asarray(
+        np.random.default_rng(1).integers(0, n_items, size=(64, 100))
+    )
+    _, us = timed(lambda: jax.block_until_ready(tab(q, idx)), n_iter=5, warmup=1)
+    pairs_per_s = 6400 / (us / 1e6)
+    emit("scorer/tabulated/B64xK100", us, f"pairs_per_s={pairs_per_s:.0f}")
+    return {"pairs_per_s": pairs_per_s}
+
+
+def run(fast: bool = False, json_path: str = "BENCH_scorer.json") -> dict:
+    out = {
+        "cross_encoder": bench_cross_encoder(fast),
+        "cache": bench_cache(fast),
+        "tabulated": bench_tabulated(fast),
+    }
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ from repro.configs.base import AdaCURConfig
 from repro.core import retrieval
 from repro.core.engine import AdaCURRetriever, ANNCURRetriever
 from repro.core.index import AnchorIndex
+from repro.core.scorer import SyntheticScorer
 from repro.data.synthetic import make_synthetic_ce
 
 
@@ -23,7 +24,9 @@ def main():
     ce = make_synthetic_ce(jax.random.PRNGKey(0), n_queries=600, n_items=10000)
     m = ce.full_matrix(jnp.arange(600))
     test_q, exact = jnp.arange(500, 600), m[500:]
-    score_fn = ce.score_fn()
+    # every provider (synthetic / tabulated / real CE) is a Scorer; see
+    # examples/real_ce_search.py for the transformer-CE stack
+    score_fn = SyntheticScorer(ce)
 
     # the offline artifact: anchor-query scores + ids; at scale this is
     # AnchorIndex.build(...) (resumable) + .save()/.load() + .shard(mesh)

@@ -7,9 +7,10 @@
 - ``anncur``    deprecated ANNCUR shims (view over AnchorIndex + engine)
 - ``retrieval`` budget-matched retrieve-and-rerank + recall metrics
 - ``index``     the AnchorIndex offline artifact (build/save/load/shard/mutate)
+- ``scorer``    the Scorer subsystem (synthetic/tabulated/real CE + cache)
 """
 
-from . import adacur, anncur, cur, engine, index, retrieval, sampling  # noqa: F401
+from . import adacur, anncur, cur, engine, index, retrieval, sampling, scorer  # noqa: F401
 from .adacur import AdaCURResult, adacur_search, make_jitted_search  # noqa: F401
 from .anncur import ANNCURIndex, build_index  # noqa: F401
 from .engine import (  # noqa: F401
@@ -17,7 +18,17 @@ from .engine import (  # noqa: F401
     ANNCURRetriever,
     RerankRetriever,
     Retriever,
+    ce_call_plan,
     engine_search,
     make_engine,
 )
 from .index import AnchorIndex, build_r_anc  # noqa: F401
+from .scorer import (  # noqa: F401
+    CachingScorer,
+    CrossEncoderScorer,
+    Scorer,
+    ScorerStats,
+    SyntheticScorer,
+    TabulatedScorer,
+    scorer_stats,
+)

@@ -47,6 +47,26 @@ from . import cur, sampling
 from .adacur import AdaCURResult, ScoreFn
 
 
+def ce_call_plan(cfg: AdaCURConfig, rounds: Optional[int] = None) -> int:
+    """Exact CE calls per query for a run executing ``rounds`` rounds.
+
+    Each executed round scores its k_s fresh anchors, plus the split-budget
+    rerank (``budget_ce - k_anchor``) once at the end.  This is the single
+    source of truth for budget accounting: ``AdaCURResult.ce_calls`` is this
+    plan at the full round count, and a counting
+    :class:`~repro.core.scorer.Scorer`'s *measured* ``stats.ce_calls`` must
+    equal ``ce_call_plan(cfg, rounds_done) * batch`` — asserted per engine
+    mode by the property-based invariant suite.
+    """
+    k_i = cfg.budget_ce if not cfg.split_budget else cfg.k_anchor
+    k_s = k_i // cfg.n_rounds
+    r = cfg.n_rounds if rounds is None else rounds
+    if not 1 <= r <= cfg.n_rounds:
+        raise ValueError(f"rounds={r} outside [1, {cfg.n_rounds}]")
+    k_r = cfg.budget_ce - k_i if cfg.split_budget else 0
+    return k_s * r + k_r
+
+
 class EngineState(NamedTuple):
     """Loop-invariant-shaped state threaded through the round body."""
 
@@ -377,7 +397,8 @@ def engine_search(
         top_idx = jnp.take_along_axis(anchor_idx, top_pos, axis=1)
         top_idx, top_s = _pad_short_ranking(top_idx, top_s)
         return AdaCURResult(
-            anchor_idx, c_test, s_hat, top_idx, top_s, k_i, rounds_done
+            anchor_idx, c_test, s_hat, top_idx, top_s, ce_call_plan(cfg),
+            rounds_done,
         )
 
     # ADACUR (split): spend the remaining budget on fresh exact CE calls for
@@ -401,7 +422,8 @@ def engine_search(
     top_idx = jnp.take_along_axis(pool_idx, top_pos, axis=1)
     top_idx, top_s = _pad_short_ranking(top_idx, top_s)
     return AdaCURResult(
-        anchor_idx, c_test, s_hat, top_idx, top_s, cfg.budget_ce, rounds_done
+        anchor_idx, c_test, s_hat, top_idx, top_s, ce_call_plan(cfg),
+        rounds_done,
     )
 
 

@@ -24,17 +24,21 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(
-    q_ref, k_ref, v_ref,          # (1, bq, hd), (1, bk, hd), (1, bk, hd)
-    o_ref,                        # (1, bq, hd)
-    m_scr, l_scr, acc_scr,        # VMEM scratch: (bq,), (bq,), (bq, hd)
-    *,
+    *refs,                        # [lens_ref,] q, k, v, o, m, l, acc
     scale: float,
     causal: bool,
     block_q: int,
     block_k: int,
     kv_len: int,
     q_offset: int,
+    has_lens: bool = False,
 ):
+    if has_lens:
+        # (1, 1) SMEM per-(batch*head) valid KV length — variable-length
+        # sequences packed into one padded bucket (cross-encoder scoring)
+        lens_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
     qi = pl.program_id(1)
     ki = pl.program_id(2)
     n_k = pl.num_programs(2)
@@ -61,7 +65,8 @@ def _flash_kernel(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale                                            # (bq, bk)
         kv_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = kv_pos < kv_len
+        limit = jnp.minimum(kv_len, lens_ref[0, 0]) if has_lens else kv_len
+        mask = kv_pos < limit
         if causal:
             q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
             mask &= kv_pos <= q_pos
@@ -92,8 +97,15 @@ def flash_attention(
     block_q: int = 128,
     block_k: int = 128,
     interpret: bool = False,
+    kv_lens: jax.Array | None = None,   # (B,) int32 valid KV length / example
 ) -> jax.Array:
-    """pallas_call wrapper; returns (B, Lq, H, hd)."""
+    """pallas_call wrapper; returns (B, Lq, H, hd).
+
+    ``kv_lens`` masks each example's trailing padding (keys at positions >=
+    kv_lens[b] never contribute): how variable-length query-item pairs are
+    scored through one static padded bucket shape without retracing.  The
+    lengths ride in SMEM per (batch*head) grid row — no (B, Lk) mask in HBM.
+    """
     b, lq, h, hd = q.shape
     _, lk, n_kv, _ = k.shape
     q_per_kv = h // n_kv
@@ -126,18 +138,31 @@ def flash_attention(
         hi = bh % h
         return (bi * n_kv + hi // q_per_kv, ki, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, block_q, hd), q_map),
+        pl.BlockSpec((1, block_k, hd), kv_map),
+        pl.BlockSpec((1, block_k, hd), kv_map),
+    ]
+    operands = [qh, kh, vh]
+    if kv_lens is not None:
+        lens_bh = jnp.repeat(kv_lens.astype(jnp.int32), h)[:, None]  # (B*H, 1)
+        in_specs.insert(
+            0,
+            pl.BlockSpec(
+                (1, 1), lambda bh, qi, ki: (bh, 0), memory_space=pltpu.SMEM
+            ),
+        )
+        operands.insert(0, lens_bh)
+
     out = pl.pallas_call(
         functools.partial(
             _flash_kernel,
             scale=scale, causal=causal,
             block_q=block_q, block_k=block_k, kv_len=lk, q_offset=q_offset,
+            has_lens=kv_lens is not None,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q, hd), q_map),
-            pl.BlockSpec((1, block_k, hd), kv_map),
-            pl.BlockSpec((1, block_k, hd), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_q, hd), q_map),
         out_shape=jax.ShapeDtypeStruct((b * h, lq_pad, hd), q.dtype),
         scratch_shapes=[
@@ -146,6 +171,6 @@ def flash_attention(
             pltpu.VMEM((block_q, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(qh, kh, vh)
+    )(*operands)
     out = out.reshape(b, h, lq_pad, hd).transpose(0, 2, 1, 3)
     return out[:, :lq]

@@ -14,7 +14,10 @@ from .kernel import flash_attention
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
-def flash_attention_op(q, k, v, *, causal=True, block_q=128, block_k=128, interpret=True):
+def flash_attention_op(
+    q, k, v, *, causal=True, block_q=128, block_k=128, interpret=True, kv_lens=None
+):
     return flash_attention(
-        q, k, v, causal=causal, block_q=block_q, block_k=block_k, interpret=interpret
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret, kv_lens=kv_lens,
     )

@@ -8,14 +8,24 @@ The production serving loop the paper's technique plugs into:
 - any :class:`repro.core.engine.Retriever` behind the unified search API —
   the default is :class:`AdaCURRetriever` on the static-shape round engine
   (``loop_mode='fori'``), so per-batch round-count overrides do not retrace;
-- request batching: queries accumulate to a batch or a deadline.  Batches
-  fire from ``submit`` when full/overdue AND from ``poll`` — an idle queue
-  with one straggler request is flushed by the event loop's periodic
-  ``poll`` even if no further request ever arrives;
+- continuous micro-batching: queries accumulate to a batch or a deadline.
+  Batches fire from ``submit`` when full/overdue AND from ``poll`` — an
+  idle queue with one straggler request is flushed by the event loop's
+  periodic ``poll`` even if no further request ever arrives.  Every fired
+  batch is padded up to one of a small set of static *batch buckets*
+  (partial fills repeat the last row; padded rows are computed and
+  discarded, exactly like the engine's ``n_valid`` item padding), so a
+  deadline straggler reuses a compiled executable instead of retracing at
+  its odd batch size;
+- scorer-measured accounting: when the retriever's score_fn is a
+  :class:`repro.core.scorer.Scorer` (e.g. ``CachingScorer`` around a
+  ``CrossEncoderScorer``), responses carry the *measured* CE calls and
+  cache hits of their batch window — the budget is observed, not assumed;
 - per-request k-NN results with exact CE scores.
 
 CLI:  PYTHONPATH=src python -m repro.launch.serve --requests 64 \
-          --retriever {adacur,anncur,rerank} [--index-path DIR]
+          --retriever {adacur,anncur,rerank} [--index-path DIR] \
+          [--scorer {synthetic,real-ce}] [--cache]
 """
 
 from __future__ import annotations
@@ -38,6 +48,7 @@ from ..core.engine import (
     Retriever,
 )
 from ..core.index import AnchorIndex, clear_build_checkpoints
+from ..core.scorer import ScorerStats, scorer_stats
 
 
 @dataclass
@@ -52,7 +63,9 @@ class RetrievalResponse:
     item_ids: np.ndarray
     scores: np.ndarray
     latency_s: float
-    ce_calls: int
+    ce_calls: int                              # planned budget (upper bound)
+    measured_ce_calls: Optional[int] = None    # scorer-measured, per batch row
+    cache_hits: Optional[int] = None           # pairs served from cache (batch)
 
 
 class AdaCURService:
@@ -63,6 +76,15 @@ class AdaCURService:
     ``r_anc`` score matrix and the service wraps it.  Swap in a mutated
     index between batches with :meth:`swap_index` — capacity-padded shapes
     mean the compiled search is reused as-is.
+
+    ``batch_buckets`` are the static batch sizes the engine compiles for:
+    every flush pads its requests up to the smallest bucket that fits
+    (repeating the last row) and slices the padding off the responses.
+    Padded rows never reach a response; note the engine's batched RNG
+    draws depend on the batch shape, so a padded flush is the same search
+    under a different (equally arbitrary) seed realization rather than a
+    bit-identical rerun of the unpadded one.  Defaults to
+    quarter/half/full of ``max_batch``.
     """
 
     def __init__(
@@ -76,6 +98,8 @@ class AdaCURService:
         retriever: Optional[Retriever] = None,
         index: Optional[Union[AnchorIndex, str, os.PathLike]] = None,
         candidate_fn: Optional[Callable] = None,
+        batch_buckets: Optional[List[int]] = None,
+        deterministic: bool = False,
     ):
         if index is not None and not isinstance(index, AnchorIndex):
             index = AnchorIndex.load(os.fspath(index))
@@ -97,20 +121,51 @@ class AdaCURService:
         self.candidate_fn = candidate_fn    # qids (B,) -> (B, M) first-stage order
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        if batch_buckets is None:
+            batch_buckets = {max(1, max_batch // 4), max(1, max_batch // 2),
+                             max_batch}
+        self.batch_buckets = sorted(set(int(b) for b in batch_buckets))
+        if self.batch_buckets[-1] != max_batch:
+            raise ValueError(
+                f"largest bucket {self.batch_buckets[-1]} must equal "
+                f"max_batch={max_batch}"
+            )
+        # measured accounting source: the retriever's scorer, if it is one
+        self._scorer = getattr(retriever, "score_fn", None)
+        # deterministic: every flush reuses the seed key, so a query's search
+        # trajectory is a function of (batch row, query_id) only.  With the
+        # noise-free "topk" strategy, repeat queries then re-request exactly
+        # the pairs already in a CachingScorer — what makes the cross-request
+        # score cache effective (at the cost of per-flush anchor diversity).
+        self.deterministic = deterministic
         self._key = jax.random.PRNGKey(seed)
         self._pending: List[RetrievalRequest] = []
 
-    def swap_index(self, index: AnchorIndex) -> None:
+    @property
+    def scorer_stats(self) -> Optional[ScorerStats]:
+        """Live measured stats of the underlying Scorer (None for bare fns)."""
+        return scorer_stats(self._scorer) if self._scorer is not None else None
+
+    def swap_index(self, index: AnchorIndex) -> List[RetrievalResponse]:
         """Serve a mutated (add/remove) index from the next batch on.  The
-        index's capacity-constant shapes mean no recompilation happens."""
+        index's capacity-constant shapes mean no recompilation happens.
+
+        Requests already queued were admitted under the live index, so they
+        are flushed against it *before* the swap (their responses are
+        returned) — a swap racing queued requests can never serve a request
+        with ids from an index it was not admitted under."""
         if getattr(self.retriever, "index", None) is None:
             raise ValueError(
                 "swap_index needs an index-backed retriever (Retriever."
                 "from_index); this retriever was built on a bare r_anc and "
                 "would keep searching the old scores"
             )
+        drained: List[RetrievalResponse] = []
+        while self._pending:
+            drained += self.flush()
         self.index = index
         self.retriever.index = index
+        return drained
 
     def _due(self) -> bool:
         if not self._pending:
@@ -133,17 +188,40 @@ class AdaCURService:
         request happened to arrive."""
         return self.flush() if self._due() else []
 
+    def _bucket(self, n: int) -> int:
+        for b in self.batch_buckets:
+            if b >= n:
+                return b
+        return self.batch_buckets[-1]
+
     def flush(self) -> List[RetrievalResponse]:
         if not self._pending:
             return []
         batch, self._pending = self._pending[: self.max_batch], self._pending[self.max_batch :]
-        qids = jnp.asarray([r.query_id for r in batch])
-        self._key, sub = jax.random.split(self._key)
+        n_valid = len(batch)
+        bucket = self._bucket(n_valid)
+        # partial fill: pad to the static bucket by repeating the last row;
+        # the padding is sliced off before responses are built
+        raw = [r.query_id for r in batch] + [batch[-1].query_id] * (bucket - n_valid)
+        qids = jnp.asarray(raw)
+        if self.deterministic:
+            sub = self._key
+        else:
+            self._key, sub = jax.random.split(self._key)
         kw = {}
         if self.candidate_fn is not None:
             kw["candidate_idx"] = self.candidate_fn(qids)
+        before = self.scorer_stats
+        before = before.copy() if before is not None else None
         res = self.retriever.search(qids, sub, **kw)
         res = jax.block_until_ready(res)
+        measured = cache_hits = None
+        if before is not None:
+            delta = self.scorer_stats - before
+            # amortized over the REAL requests: padded filler rows are a
+            # cost of serving them, so their calls are not averaged away
+            measured = delta.ce_calls // n_valid
+            cache_hits = delta.cache_hits
         # single source of truth: an index-backed retriever may have been
         # mutated directly (retriever.index = ...), so map positions through
         # ITS index, not a possibly-stale service copy
@@ -163,6 +241,8 @@ class AdaCURService:
                     scores=np.asarray(res.topk_scores[i]),
                     latency_s=time.monotonic() - r.arrival_t,
                     ce_calls=res.ce_calls,
+                    measured_ce_calls=measured,
+                    cache_hits=cache_hits,
                 )
             )
         return out
@@ -208,9 +288,20 @@ def main() -> None:
     ap.add_argument("--index-path", default=None,
                     help="AnchorIndex directory: loaded when present, else "
                          "built once and saved there")
+    ap.add_argument("--scorer", choices=("synthetic", "real-ce"),
+                    default="synthetic",
+                    help="real-ce: a transformer CrossEncoderScorer over a "
+                         "ZESHEL-like corpus (bucketed micro-batching through "
+                         "the flash-attention path)")
+    ap.add_argument("--cache", action="store_true",
+                    help="wrap the scorer in a (query, item) score cache")
     args = ap.parse_args()
 
     from ..data.synthetic import make_synthetic_ce
+
+    if args.scorer == "real-ce":
+        _serve_real_ce(args)
+        return
 
     index = None
     if args.index_path and os.path.exists(
@@ -243,7 +334,15 @@ def main() -> None:
         strategy="topk", k_retrieve=100, loop_mode="fori",
         use_fused_topk=args.fused,
     )
-    retriever = make_retriever(args.retriever, index, ce.score_fn(), cfg)
+    from ..core.scorer import CachingScorer, SyntheticScorer, TabulatedScorer
+
+    if args.cache:
+        # caching requires a host-backed scorer; tabulate the synthetic CE
+        m = ce.full_matrix(jnp.arange(600))
+        score_fn = CachingScorer(TabulatedScorer(np.asarray(m)))
+    else:
+        score_fn = SyntheticScorer(ce)
+    retriever = make_retriever(args.retriever, index, score_fn, cfg)
     candidate_fn = None
     if args.retriever == "rerank":
         # stand-in first-stage retriever: dual-encoder dot-product order
@@ -255,22 +354,89 @@ def main() -> None:
     svc = AdaCURService(
         retriever=retriever, max_batch=args.batch, candidate_fn=candidate_fn
     )
+    _drive(svc, args, cfg, brute_n=args.n_items)
 
+
+def _drive(svc: AdaCURService, args, cfg: AdaCURConfig,
+           qid_range=(500, 600), label: Optional[str] = None,
+           brute_n: Optional[int] = None) -> None:
     served = []
     rng = np.random.default_rng(0)
     for i in range(args.requests):
-        qid = int(rng.integers(500, 600))
+        qid = int(rng.integers(*qid_range))
         served += svc.submit(RetrievalRequest(query_id=qid)) or []
         served += svc.poll()   # the event loop's deadline sweep
     served += svc.flush()
     lat = np.array([r.latency_s for r in served])
-    print(
-        f"[{args.retriever}] served {len(served)} requests | "
-        f"p50={np.percentile(lat, 50)*1e3:.1f}ms "
-        f"p99={np.percentile(lat, 99)*1e3:.1f}ms | "
-        f"{cfg.budget_ce} CE calls/request (vs {args.n_items} brute force = "
-        f"{args.n_items / cfg.budget_ce:.0f}x fewer)"
+    ratio = (
+        f" | {cfg.budget_ce} CE calls/request (vs {brute_n} brute force = "
+        f"{brute_n / cfg.budget_ce:.0f}x fewer)"
+        if brute_n else ""
     )
+    print(
+        f"[{label or args.retriever}] served {len(served)} requests | "
+        f"p50={np.percentile(lat, 50)*1e3:.1f}ms "
+        f"p99={np.percentile(lat, 99)*1e3:.1f}ms{ratio}"
+    )
+    stats = svc.scorer_stats
+    if stats is not None:
+        print(
+            f"measured: {stats.ce_calls} CE calls, {stats.cache_hits} cache "
+            f"hits ({stats.cache_size} resident pairs)"
+        )
+
+
+def _serve_real_ce(args) -> None:
+    """End-to-end serving with the REAL transformer cross-encoder: offline
+    index built by the bulk CE path, online scoring through the bucketed
+    flash-attention CrossEncoderScorer (+ optional pair cache)."""
+    from ..configs.base import replace as cfg_replace
+    from ..configs.registry import CE_TINY
+    from ..core.scorer import CachingScorer, CrossEncoderScorer
+    from ..data.synthetic import make_zeshel_like
+    from ..models import cross_encoder
+
+    n_items = min(args.n_items, 500)       # CE-scored corpus: keep CPU-friendly
+    n_anchor_q, n_serve_q = 100, 100
+    print(f"building ZESHEL-like corpus (|I|={n_items}) + tiny transformer CE...")
+    ds = make_zeshel_like(0, n_items=n_items, n_queries=n_anchor_q + n_serve_q,
+                          item_len=24, query_len=16)
+    lm_cfg = cfg_replace(
+        CE_TINY, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=ds.vocab_size, dtype="float32", remat=False,
+    )
+    params, _ = cross_encoder.init_cross_encoder(jax.random.PRNGKey(0), lm_cfg)
+    scorer = CrossEncoderScorer(
+        params, lm_cfg, ds.pair_tokens, micro_batch=64, flash_block=(64, 64)
+    )
+    if args.cache:
+        scorer = CachingScorer(scorer)
+
+    print("building AnchorIndex from the CE itself (block-streamed)...")
+
+    def bulk(q_ids, item_ids):
+        q = np.asarray(q_ids)
+        items = np.tile(np.asarray(item_ids), (len(q), 1))
+        inner = scorer.inner if args.cache else scorer
+        return jnp.asarray(inner._host(q, items))
+
+    index = AnchorIndex.build(
+        bulk, jnp.arange(n_anchor_q), jnp.arange(n_items), block_rows=32,
+    )
+    scorer.reset_stats()      # offline-build calls are not serving cost
+    cfg = AdaCURConfig(
+        k_anchor=args.budget // 2, n_rounds=args.rounds, budget_ce=args.budget,
+        strategy="topk", k_retrieve=50, loop_mode="fori",
+        use_fused_topk=args.fused,
+    )
+    retriever = make_retriever(args.retriever, index, scorer, cfg)
+    svc = AdaCURService(retriever=retriever, max_batch=args.batch)
+    _drive(svc, args, cfg,
+           qid_range=(n_anchor_q, n_anchor_q + n_serve_q),
+           label=f"real-ce/{args.retriever}")
+    inner = scorer.inner if args.cache else scorer
+    print(f"compiled CE shapes: {inner.n_traces} (static buckets — no "
+          f"retraces); {inner.stats.batch_pad} padded micro-batch rows")
 
 
 if __name__ == "__main__":

@@ -33,11 +33,21 @@ def score_tokens(
     cfg: LMConfig,
     pad_id: int = 0,
     moe_fn=None,
+    attn_impl: str = "ref",          # "flash": Pallas kernel, SMEM varlen mask
+    flash_block=(128, 128),
+    flash_interpret: bool = True,
 ) -> jax.Array:
-    """Exact CE score for a batch of already-concatenated pairs -> (B,)."""
+    """Exact CE score for a batch of already-concatenated pairs -> (B,).
+
+    Pair tokens are valid-first with trailing ``pad_id`` padding (what
+    ``ZeshelLikeDataset.pair_tokens`` + bucket padding produce), so the
+    flash path can mask per-example lengths instead of a (B, L) key mask.
+    """
     kv_mask = pair_tokens != pad_id
     h, _ = transformer.encode(
-        params, pair_tokens, cfg, kv_mask=kv_mask, moe_fn=moe_fn
+        params, pair_tokens, cfg, kv_mask=kv_mask, moe_fn=moe_fn,
+        attn_impl=attn_impl, flash_block=flash_block,
+        flash_interpret=flash_interpret,
     )
     cls = h[:, 0, :].astype(jnp.float32)
     return (cls @ params["score_head"].astype(jnp.float32))[:, 0]
@@ -49,10 +59,17 @@ def score_pairs(
     cfg: LMConfig,
     pad_id: int = 0,
     moe_fn=None,
+    attn_impl: str = "ref",
+    flash_block=(128, 128),
+    flash_interpret: bool = True,
 ) -> jax.Array:
     """(B, K) scores: flattens the item axis into the CE batch."""
     b, k, l = pair_tokens.shape
-    flat = score_tokens(params, pair_tokens.reshape(b * k, l), cfg, pad_id, moe_fn)
+    flat = score_tokens(
+        params, pair_tokens.reshape(b * k, l), cfg, pad_id, moe_fn,
+        attn_impl=attn_impl, flash_block=flash_block,
+        flash_interpret=flash_interpret,
+    )
     return flat.reshape(b, k)
 
 

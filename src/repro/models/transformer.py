@@ -175,7 +175,7 @@ def _constrain(h, act_spec):
     return h
 
 
-def _encode_layer(cfg: LMConfig, moe_fn, q_chunk, act_spec, attn_spec, h, layer_params, positions, kv_mask):
+def _encode_layer(cfg: LMConfig, moe_fn, attn_fn, act_spec, attn_spec, h, layer_params, positions, kv_mask):
     b, l, d = h.shape
     x = _apply_norm(cfg, layer_params["ln1"], h)
     q, k, v = _project_qkv(cfg, layer_params["attn"], x, positions)
@@ -183,9 +183,7 @@ def _encode_layer(cfg: LMConfig, moe_fn, q_chunk, act_spec, attn_spec, h, layer_
     # the residual stream outside shards by sequence — GSPMD inserts the
     # boundary all-to-alls.
     q = _constrain(q, attn_spec)
-    attn_out = layers.attention_ref(
-        q, k, v, causal=cfg.causal, q_chunk=q_chunk, kv_mask=kv_mask
-    )
+    attn_out = attn_fn(q, k, v, kv_mask)
     attn_out = _constrain(attn_out, attn_spec)
     h = h + jnp.einsum("...hk,hkd->...d", attn_out, layer_params["attn"]["wo"])
     x2 = _apply_norm(cfg, layer_params["ln2"], h).reshape(b * l, d)
@@ -208,14 +206,42 @@ def encode(
     return_kv: bool = False,
     act_spec=None,                          # PartitionSpec for the residual stream
     attn_spec=None,                         # PartitionSpec for (B, L, H, hd)
+    attn_impl: str = "ref",                 # "ref" | "flash" (Pallas kernel)
+    flash_block: Tuple[int, int] = (128, 128),
+    flash_interpret: bool = True,           # interpret-mode Pallas (CPU)
 ):
-    """Full forward pass. Returns (hidden (B,L,d), aux_loss[, kv caches])."""
+    """Full forward pass. Returns (hidden (B,L,d), aux_loss[, kv caches]).
+
+    ``attn_impl='flash'`` routes the attention core through the Pallas
+    flash-attention kernel.  ``kv_mask`` must then describe *trailing*
+    padding only (valid tokens first) — it is collapsed to a per-example
+    valid length that rides in SMEM; the CE pair tokenizer produces exactly
+    this layout.
+    """
     b, l = tokens.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(l)[None, :], (b, l))
     h = _constrain(params["embed"][tokens].astype(_dtype(cfg)), act_spec)
 
-    layer_fn = partial(_encode_layer, cfg, moe_fn, q_chunk, act_spec, attn_spec)
+    if attn_impl == "flash":
+        from ..kernels.flash_attention.kernel import flash_attention
+
+        def attn_fn(q, k, v, mask):
+            return flash_attention(
+                q, k, v, causal=cfg.causal,
+                block_q=flash_block[0], block_k=flash_block[1],
+                interpret=flash_interpret,
+                kv_lens=None if mask is None else mask.sum(-1).astype(jnp.int32),
+            )
+    elif attn_impl == "ref":
+        def attn_fn(q, k, v, mask):
+            return layers.attention_ref(
+                q, k, v, causal=cfg.causal, q_chunk=q_chunk, kv_mask=mask
+            )
+    else:
+        raise ValueError(f"unknown attn_impl '{attn_impl}' (ref|flash)")
+
+    layer_fn = partial(_encode_layer, cfg, moe_fn, attn_fn, act_spec, attn_spec)
     if cfg.remat:
         layer_fn = jax.checkpoint(layer_fn, static_argnums=())
 

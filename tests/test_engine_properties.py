@@ -1,0 +1,187 @@
+"""Property-based engine invariants (hypothesis; the deterministic fallback
+shim runs the same strategies offline):
+
+(a) recall@k is non-decreasing in the executed round count for a fixed
+    seed (no-split ranking: anchor pools are nested and exactly scored, so
+    this holds as a theorem, not a tendency);
+(b) no (query, item) pair is CE-scored twice within one search — the
+    dedup/suppression invariant, reconstructed from a recording
+    TabulatedScorer's call log;
+(c) total measured CE calls per query equal ``ce_call_plan(cfg, rounds)``
+    exactly, under every engine mode (unrolled / fori with runtime round
+    overrides / early-exit) — the budget is measured, not assumed.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    def _settings(**kw):
+        kw.setdefault("deadline", None)
+        kw.setdefault(
+            "suppress_health_check",
+            [HealthCheck.too_slow, HealthCheck.data_too_large],
+        )
+        return settings(**kw)
+except ImportError:          # hermetic container: deterministic shim
+    from _hypothesis_fallback import given, settings, st
+
+    def _settings(**kw):
+        kw.pop("deadline", None)
+        kw.pop("suppress_health_check", None)
+        return settings(**kw)
+
+from repro.configs.base import AdaCURConfig
+from repro.core import engine, retrieval
+from repro.core.engine import ce_call_plan
+from repro.core.scorer import TabulatedScorer
+from repro.data.synthetic import make_synthetic_ce
+
+N_ANCHOR_Q, N_TEST_Q, N_ITEMS = 30, 10, 250
+
+
+@pytest.fixture(scope="module")
+def dom():
+    ce = make_synthetic_ce(
+        jax.random.PRNGKey(0), n_queries=N_ANCHOR_Q + N_TEST_Q, n_items=N_ITEMS
+    )
+    m = np.asarray(ce.full_matrix(jnp.arange(N_ANCHOR_Q + N_TEST_Q)))
+    return {
+        "m": m,
+        "r_anc": jnp.asarray(m[:N_ANCHOR_Q]),
+        "test_q": jnp.arange(N_ANCHOR_Q, N_ANCHOR_Q + N_TEST_Q),
+        "exact": jnp.asarray(m[N_ANCHOR_Q:]),
+    }
+
+
+def _pair_sets_per_row(call_log):
+    """row -> list of (qid, item) pairs scored for that batch row."""
+    rows = {}
+    for qids, idx in call_log:
+        for r in range(idx.shape[0]):
+            rows.setdefault(r, []).extend(
+                (int(qids[r]), int(i)) for i in idx[r]
+            )
+    return rows
+
+
+class TestRecallMonotoneInRounds:
+    @_settings(max_examples=5)
+    @given(
+        k_s=st.sampled_from([4, 8]),
+        r_max=st.sampled_from([2, 3, 4]),
+        strategy=st.sampled_from(["topk", "softmax", "random"]),
+        k_retrieve=st.sampled_from([5, 10]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_no_split_recall_non_decreasing(self, dom, k_s, r_max, strategy,
+                                            k_retrieve, seed):
+        """More rounds => nested, exactly-scored anchor pools => recall@k
+        (k = k_retrieve) cannot drop.  One compiled fori engine serves every
+        runtime round count."""
+        cfg = AdaCURConfig(
+            k_anchor=k_s * r_max, n_rounds=r_max, budget_ce=k_s * r_max,
+            split_budget=False, strategy=strategy, k_retrieve=k_retrieve,
+            loop_mode="fori",
+        )
+        scorer = TabulatedScorer(dom["m"])
+        run = engine.make_engine(scorer, cfg)
+        key = jax.random.PRNGKey(seed)
+        _, gt = retrieval.exact_topk(dom["exact"], k_retrieve)
+        recalls = []
+        for r in range(1, r_max + 1):
+            res = run(dom["r_anc"], dom["test_q"], key, n_rounds=r)
+            recalls.append(
+                float(retrieval.topk_recall(res.topk_idx, gt, k_retrieve))
+            )
+        for lo, hi in zip(recalls, recalls[1:]):
+            assert hi >= lo - 1e-9, f"recall dropped across rounds: {recalls}"
+
+    def test_split_budget_recall_trend(self, dom):
+        """Split-budget recall is not a theorem (the rerank pool is chosen
+        by a changing approximation), but over the full round range it must
+        trend up for a fixed seed — the paper's Fig. 3."""
+        cfg = AdaCURConfig(
+            k_anchor=24, n_rounds=4, budget_ce=48, k_retrieve=10,
+            loop_mode="fori",
+        )
+        run = engine.make_engine(TabulatedScorer(dom["m"]), cfg)
+        key = jax.random.PRNGKey(7)
+        _, gt = retrieval.exact_topk(dom["exact"], 10)
+        recalls = [
+            float(retrieval.topk_recall(
+                run(dom["r_anc"], dom["test_q"], key, n_rounds=r).topk_idx,
+                gt, 10,
+            ))
+            for r in (1, 4)
+        ]
+        assert recalls[-1] >= recalls[0] - 0.05
+
+
+class TestScoredPairInvariants:
+    @_settings(max_examples=6)
+    @given(
+        mode=st.sampled_from(["unrolled", "fori", "early"]),
+        split=st.booleans(),
+        strategy=st.sampled_from(["topk", "softmax"]),
+        epsilon=st.sampled_from([0.0, 0.25]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_dedup_and_exact_call_count(self, dom, mode, split, strategy,
+                                        epsilon, seed):
+        """(b) + (c) in one engine run: every scored (query, item) pair is
+        unique within its search row, and the measured total equals the
+        plan for the rounds actually executed."""
+        cfg = AdaCURConfig(
+            k_anchor=16, n_rounds=4, budget_ce=32 if split else 16,
+            split_budget=split, strategy=strategy, round_epsilon=epsilon,
+            k_retrieve=8,
+            loop_mode="unrolled" if mode == "unrolled" else "fori",
+            early_exit_tol=0.4 if mode == "early" else 0.0,
+        )
+        scorer = TabulatedScorer(dom["m"], record_pairs=True)
+        run = engine.make_engine(scorer, cfg)
+        res = jax.block_until_ready(
+            run(dom["r_anc"], dom["test_q"], jax.random.PRNGKey(seed))
+        )
+
+        rows = _pair_sets_per_row(scorer.call_log)
+        assert len(rows) == N_TEST_Q
+        for r, pairs in rows.items():
+            assert len(pairs) == len(set(pairs)), (
+                f"row {r}: {len(pairs) - len(set(pairs))} pairs CE-scored twice"
+            )
+
+        rounds_done = int(res.rounds_done)
+        planned = ce_call_plan(cfg, rounds_done) * N_TEST_Q
+        assert scorer.stats.ce_calls == planned, (
+            f"measured {scorer.stats.ce_calls} != planned {planned} "
+            f"(mode={mode}, rounds_done={rounds_done})"
+        )
+        # the planned budget the result reports stays an upper bound
+        assert ce_call_plan(cfg, rounds_done) <= res.ce_calls
+
+    @_settings(max_examples=4)
+    @given(
+        n_rounds=st.integers(min_value=1, max_value=4),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_runtime_round_override_call_count(self, dom, n_rounds, seed):
+        """(c) under fori runtime round overrides: one executable, exact
+        measured calls at every round count."""
+        cfg = AdaCURConfig(
+            k_anchor=16, n_rounds=4, budget_ce=32, k_retrieve=8,
+            loop_mode="fori",
+        )
+        scorer = TabulatedScorer(dom["m"])
+        run = engine.make_engine(scorer, cfg)
+        jax.block_until_ready(
+            run(dom["r_anc"], dom["test_q"], jax.random.PRNGKey(seed),
+                n_rounds=n_rounds)
+        )
+        assert scorer.stats.ce_calls == ce_call_plan(cfg, n_rounds) * N_TEST_Q
+        scorer.reset_stats()

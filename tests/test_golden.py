@@ -1,0 +1,102 @@
+"""Golden regression: the engine's top-k ids + exact scores for a
+fixed-seed synthetic corpus are pinned in ``tests/golden/`` and compared
+with tolerance — silent numeric drift across refactors fails CI instead of
+shipping.
+
+Regenerate intentionally (after an *accepted* behavior change) with:
+
+    GOLDEN_REGEN=1 PYTHONPATH=src python -m pytest tests/test_golden.py
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AdaCURConfig
+from repro.core import engine
+from repro.core.scorer import TabulatedScorer
+from repro.data.synthetic import make_synthetic_ce
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "engine_topk.json")
+
+# near-ties may swap ranking positions under BLAS/version drift; scores
+# themselves must stay put much more tightly than this
+SCORE_ATOL = 1e-3
+MIN_ID_OVERLAP = 0.9
+
+CASES = {
+    # name -> engine configuration over the same fixed-seed domain
+    "fori_dense": AdaCURConfig(
+        k_anchor=24, n_rounds=4, budget_ce=48, k_retrieve=10, loop_mode="fori"
+    ),
+    "fori_fused": AdaCURConfig(
+        k_anchor=24, n_rounds=4, budget_ce=48, k_retrieve=10, loop_mode="fori",
+        use_fused_topk=True, fused_tile=128,
+    ),
+    "unrolled_no_split": AdaCURConfig(
+        k_anchor=48, n_rounds=4, budget_ce=48, split_budget=False,
+        k_retrieve=10, loop_mode="unrolled",
+    ),
+}
+
+
+@pytest.fixture(scope="module")
+def dom():
+    ce = make_synthetic_ce(jax.random.PRNGKey(0), n_queries=60, n_items=400)
+    m = np.asarray(ce.full_matrix(jnp.arange(60)))
+    return {"m": m, "r_anc": jnp.asarray(m[:40]), "test_q": jnp.arange(40, 60)}
+
+
+def _run_case(dom, cfg: AdaCURConfig):
+    run = engine.make_engine(TabulatedScorer(dom["m"]), cfg)
+    res = run(dom["r_anc"], dom["test_q"], jax.random.PRNGKey(11))
+    return (
+        np.asarray(res.topk_idx, dtype=np.int64),
+        np.asarray(res.topk_scores, dtype=np.float64),
+    )
+
+
+def test_engine_topk_matches_golden(dom):
+    if os.environ.get("GOLDEN_REGEN"):
+        snap = {}
+        for name, cfg in CASES.items():
+            idx, scores = _run_case(dom, cfg)
+            snap[name] = {"topk_idx": idx.tolist(),
+                          "topk_scores": np.round(scores, 6).tolist()}
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(snap, f, indent=1)
+        pytest.skip(f"regenerated {GOLDEN_PATH}")
+
+    assert os.path.exists(GOLDEN_PATH), (
+        f"missing golden snapshot {GOLDEN_PATH}; run with GOLDEN_REGEN=1"
+    )
+    with open(GOLDEN_PATH) as f:
+        snap = json.load(f)
+    assert set(snap) == set(CASES), "golden cases out of sync with CASES"
+
+    for name, cfg in CASES.items():
+        idx, scores = _run_case(dom, cfg)
+        g_idx = np.asarray(snap[name]["topk_idx"])
+        g_scores = np.asarray(snap[name]["topk_scores"])
+        # scores drift-bounded elementwise: a near-tie id swap keeps the
+        # score trajectory within tolerance, real drift does not
+        np.testing.assert_allclose(
+            scores, g_scores, atol=SCORE_ATOL, rtol=0,
+            err_msg=f"[{name}] top-k scores drifted past {SCORE_ATOL}",
+        )
+        same = (idx[:, :, None] == g_idx[:, None, :]).any(-1).mean()
+        assert same >= MIN_ID_OVERLAP, (
+            f"[{name}] top-k id overlap {same:.3f} < {MIN_ID_OVERLAP}"
+        )
+        # retrieved scores must remain the exact CE scores of their ids
+        np.testing.assert_allclose(
+            scores,
+            dom["m"][40:][np.arange(20)[:, None], idx],
+            atol=1e-4, rtol=1e-4,
+            err_msg=f"[{name}] returned scores are not the exact CE scores",
+        )

@@ -71,6 +71,37 @@ class TestFlashAttention:
         ref = attention_reference(q, k, v, causal=causal)
         assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
 
+    @settings(max_examples=8, deadline=None)
+    @given(
+        l=st.integers(17, 96),
+        h=st.sampled_from([2, 4]),
+        causal=st.booleans(),
+        seed=st.integers(0, 1000),
+    )
+    def test_varlen_kv_lens_matches_masked_reference(self, l, h, causal, seed):
+        """Per-example SMEM valid lengths (the CE bucket-padding path): the
+        kernel must equal dense attention over each row's valid prefix, at
+        every valid query position."""
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        b, hd = 3, 16
+        q = jax.random.normal(ks[0], (b, l, h, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (b, l, h, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (b, l, h, hd), jnp.float32)
+        lens = jax.random.randint(ks[3], (b,), 1, l + 1)
+        out = flash_attention(
+            q, k, v, causal=causal, block_q=32, block_k=32, interpret=True,
+            kv_lens=lens,
+        )
+        for i in range(b):
+            n = int(lens[i])
+            ref = attention_reference(
+                q[i : i + 1, :n], k[i : i + 1, :n], v[i : i + 1, :n],
+                causal=causal,
+            )
+            assert_allclose(
+                np.asarray(out[i, :n]), np.asarray(ref[0]), atol=3e-5, rtol=3e-5
+            )
+
 
 class TestApproxTopK:
     @pytest.mark.parametrize("impl", ["pallas", "scan"])
