@@ -16,7 +16,11 @@ import jax.numpy as jnp
 
 from repro.configs.base import AdaCURConfig, replace
 from repro.core import cur, sampling
-from repro.core.engine import AdaCURRetriever, round_body_bn_intermediates
+from repro.core.engine import (
+    AdaCURRetriever,
+    engine_slab_bytes,
+    round_body_bn_intermediates,
+)
 
 from .common import emit, make_domain
 
@@ -131,6 +135,16 @@ def run_engine(
         "batch": batch,
         "budget_ce": budget,
         "n_rounds": n_rounds,
+        # the engine's whole device working set: the index payload it
+        # streams plus its preallocated per-search state slabs — tracked so
+        # the memory story scales alongside the latency one
+        "device_bytes": {
+            "index_payload": int(dom.index.payload_nbytes),
+            "index_payload_dtype": dom.index.payload_dtype,
+            "engine_slabs": engine_slab_bytes(
+                base, batch, int(dom.r_anc.shape[1]), int(dom.r_anc.shape[0])
+            ),
+        },
         "paths": {},
     }
     paths = {"dense": base, "fused": replace(base, use_fused_topk=True)}
@@ -191,15 +205,60 @@ def run_engine(
     return snapshot
 
 
+def run_scaling(
+    n_items_list,
+    budget: int = 200,
+    n_rounds: int = 5,
+    batch: int = 256,
+    json_path: str = "BENCH_engine.json",
+):
+    """``--n-items`` scaling sweep: the engine bench at each corpus size,
+    recording per-round latency AND device-buffer bytes (index payload +
+    engine slabs) per point — the memory axis of the scaling story.
+
+    The base snapshot (smallest N) keeps the standard BENCH_engine.json
+    schema; the remaining sizes land under ``"sweep"``.
+    """
+    sizes = sorted(int(n) for n in n_items_list)
+    base_snap = None
+    sweep = {}
+    for n in sizes:
+        dom = make_domain(n_items=n)
+        snap = run_engine(
+            dom, budget=budget, n_rounds=n_rounds, batch=batch, json_path=None
+        )
+        sweep[str(n)] = {
+            "per_round_ms": {
+                tag: snap["paths"][tag]["per_round_ms"] for tag in snap["paths"]
+            },
+            "device_bytes": snap["device_bytes"],
+        }
+        if base_snap is None:
+            base_snap = snap
+    base_snap["sweep"] = sweep
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(base_snap, fh, indent=2)
+        print(f"# wrote {json_path} ({len(sizes)}-point scaling sweep)")
+    return base_snap
+
+
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine-only", action="store_true",
                     help="skip the Fig. 4 staged sweep, run only the engine bench")
+    ap.add_argument("--n-items", default=None,
+                    help="comma-separated corpus sizes: run the engine "
+                         "scaling sweep instead (e.g. 10000,30000,100000)")
     ap.add_argument("--json", default="BENCH_engine.json")
     args = ap.parse_args()
-    dom = make_domain()
-    if not args.engine_only:
-        run(dom)
-    run_engine(dom, json_path=args.json)
+    if args.n_items:
+        run_scaling([int(s) for s in args.n_items.split(",")],
+                    json_path=args.json)
+    else:
+        dom = make_domain()
+        if not args.engine_only:
+            run(dom)
+        run_engine(dom, json_path=args.json)

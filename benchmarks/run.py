@@ -14,6 +14,10 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="smaller domain")
+    ap.add_argument("--n-items", default=None,
+                    help="comma-separated corpus sizes: run ONLY the engine "
+                         "scaling sweep (per-round latency + device-buffer "
+                         "bytes per size -> BENCH_engine.json)")
     args = ap.parse_args()
 
     from . import (
@@ -25,10 +29,17 @@ def main() -> None:
         latency_breakdown,
         oracle_sampling,
         pinv_incremental,
+        quantized_engine,
         recall_budget,
         rounds_sweep,
         scorer_throughput,
     )
+
+    if args.n_items:
+        latency_breakdown.run_scaling(
+            [int(s) for s in args.n_items.split(",")]
+        )
+        return
 
     if args.fast:
         dom = common.make_domain(n_items=2000, n_train_q=200, n_test_q=60)
@@ -53,6 +64,12 @@ def main() -> None:
         (
             "scorer_throughput (CE bucketing + score cache)",
             lambda: scorer_throughput.run(fast=args.fast),
+        ),
+        (
+            "quantized_engine (int8 payload vs fp32)",
+            lambda: quantized_engine.run(
+                sizes=(10_000,) if args.fast else (10_000, 100_000)
+            ),
         ),
     ]
     failed = 0

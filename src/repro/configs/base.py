@@ -247,6 +247,16 @@ class AdaCURConfig:
     # provisional top-k_retrieve candidate set overlap reaches 1 - tol.
     # 0.0 always runs the full round budget.
     early_exit_tol: float = 0.0
+    # Storage/streaming dtype of the R_anc payload the item-axis hot path
+    # reads every round.  "int8" stores per-item-tile symmetric codes + fp32
+    # scales (~4x fewer bytes; the fused kernel dequantizes tile-by-tile in
+    # registers); "bfloat16" halves the payload with no extra state.  An
+    # index-backed retriever quantizes its AnchorIndex once at from_index;
+    # a bare-r_anc retriever converts the operand inside the trace (per
+    # call — prefer the index path at scale).  Exact CE scores, the pinv
+    # state and the final ranking stay fp32 throughout.
+    payload_dtype: str = "float32"   # "float32" | "bfloat16" | "int8"
+    payload_tile: int = 512          # item-axis quantization tile (int8)
     # Regularized pinv: adaptively-selected anchors are correlated, so the
     # anchor column matrix conditions much worse than a random subset
     # (measured ~13500 vs ~210); truncating tiny singular values keeps the
@@ -264,6 +274,13 @@ class AdaCURConfig:
             raise ValueError(f"unknown loop_mode '{self.loop_mode}'")
         if self.early_exit_tol > 0.0 and self.loop_mode != "fori":
             raise ValueError("early_exit_tol requires loop_mode='fori'")
+        if self.payload_dtype not in ("float32", "bfloat16", "int8"):
+            raise ValueError(
+                f"unknown payload_dtype '{self.payload_dtype}' "
+                "(float32|bfloat16|int8)"
+            )
+        if self.payload_tile <= 0:
+            raise ValueError("payload_tile must be positive")
 
 
 def replace(cfg, **kw):

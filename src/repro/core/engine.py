@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import AdaCURConfig, replace
+from ..kernels.approx_topk import quant
 from ..kernels.approx_topk.ops import approx_topk_op
 from . import cur, sampling
 from .adacur import AdaCURResult, ScoreFn
@@ -78,6 +79,29 @@ class EngineState(NamedTuple):
     selected: jax.Array      # (B, N) bool mask of already-selected items
 
 
+def _effective_tile(cfg: AdaCURConfig, r_anc) -> int:
+    """Item-tile width of the fused kernel for this payload.
+
+    On the CPU scan backend (``fused_interpret``) the binding constraint is
+    the payload tile's L2 residency, so ``cfg.fused_tile`` acts as a
+    per-tile *byte* budget expressed in fp32 columns: a quantized payload
+    streams proportionally more columns in the same footprint (x4 int8,
+    x2 bf16) — which is where the ~4x fewer bytes per round turn into
+    wall-clock on CPU.  The compiled TPU kernel keeps the configured column
+    count: its VMEM budget is dominated by the (B, T) fp32 score (and
+    noise/mask) blocks, which do NOT shrink with the payload dtype —
+    widening T 4x there would blow VMEM; the int8 win on TPU is the 4x
+    smaller HBM stream per (unchanged) tile."""
+    if not cfg.fused_interpret:
+        return cfg.fused_tile
+    dtype = quant.payload_dtype_of(r_anc)
+    if dtype == "int8":
+        return cfg.fused_tile * 4
+    if dtype == "bfloat16":
+        return cfg.fused_tile * 2
+    return cfg.fused_tile
+
+
 def _fused_suppress(
     cfg: AdaCURConfig, state: EngineState, force_mask: bool = False
 ) -> dict:
@@ -104,9 +128,13 @@ def _sample_round(
     n_valid: Optional[int],
     force_mask: bool = False,
 ) -> jax.Array:
-    """One adaptive round's anchor pick (Alg. 3) — dense or fused."""
+    """One adaptive round's anchor pick (Alg. 3) — dense or fused.
+
+    ``r_anc`` is any payload type (fp32/bf16 array or int8 QuantizedRanc);
+    both branches dequantize per column, the dense one via
+    :func:`quant.matmul`, the fused one inside the kernel tiles."""
     if not cfg.use_fused_topk:
-        s_hat = state.e_q @ r_anc
+        s_hat = quant.matmul(state.e_q, r_anc)
         return sampling.sample(
             cfg.strategy, key, s_hat, state.selected, k_eff, cfg.softmax_temp
         )
@@ -120,14 +148,14 @@ def _sample_round(
         g = jax.random.gumbel(key, (b, n), dtype=jnp.float32)
         e_q = state.e_q / jnp.asarray(cfg.softmax_temp, state.e_q.dtype)
         _, idx = approx_topk_op(
-            e_q, r_anc, k=k_eff, tile=cfg.fused_tile,
+            e_q, r_anc, k=k_eff, tile=_effective_tile(cfg, r_anc),
             interpret=cfg.fused_interpret, noise=g, n_valid=n_valid,
             **suppress,
         )
         return idx
     # topk: temp > 0 is order-preserving, no noise needed
     _, idx = approx_topk_op(
-        state.e_q, r_anc, k=k_eff, tile=cfg.fused_tile,
+        state.e_q, r_anc, k=k_eff, tile=_effective_tile(cfg, r_anc),
         interpret=cfg.fused_interpret, n_valid=n_valid, **suppress,
     )
     return idx
@@ -166,7 +194,7 @@ def _make_round_body(
 
         # exact CE scores for the new slab (Alg. 1 line 15)
         c_new = score_fn(query, idx_new)                       # (B, k_s)
-        cols_new = cur.gather_anchor_columns(
+        cols_new = quant.gather_columns(
             r_anc, idx_new, via_onehot=cfg.distributed_gather
         )                                                      # (B, k_q, k_s)
 
@@ -205,11 +233,11 @@ def _provisional_topk(cfg: AdaCURConfig, e_q, r_anc, m: int, n_valid, invalid=No
             else jnp.broadcast_to(invalid[None, :], (e_q.shape[0], r_anc.shape[1]))
         )
         _, idx = approx_topk_op(
-            e_q, r_anc, None, m, tile=cfg.fused_tile,
+            e_q, r_anc, None, m, tile=_effective_tile(cfg, r_anc),
             interpret=cfg.fused_interpret, n_valid=n_valid, mask=mask,
         )
         return idx
-    s_hat = e_q @ r_anc
+    s_hat = quant.matmul(e_q, r_anc)
     if n_valid is not None and n_valid < s_hat.shape[1]:
         s_hat = jnp.where(jnp.arange(s_hat.shape[1]) < n_valid, s_hat, sampling.NEG_INF)
     if invalid is not None:
@@ -267,7 +295,14 @@ def engine_search(
     growing/shrinking the valid prefix of a padded index never retraces),
     and ``item_ids`` (N,) maps engine positions to external corpus ids
     before every ``score_fn`` call.
+
+    ``r_anc`` may be an fp32/bf16 array or an int8
+    :class:`~repro.kernels.approx_topk.quant.QuantizedRanc` payload;
+    ``cfg.payload_dtype`` converts a plain array up to the configured
+    payload inside the trace (an AnchorIndex-backed retriever pre-quantizes
+    instead — see ``Retriever.from_index``).
     """
+    r_anc = quant.as_payload(r_anc, cfg.payload_dtype, cfg.payload_tile)
     k_q, n_items = r_anc.shape
     k_i = cfg.budget_ce if not cfg.split_budget else cfg.k_anchor
     r_max = cfg.n_rounds
@@ -322,7 +357,7 @@ def engine_search(
         idx0 = sampling.sample_random(keys[0], selected, k_s)
     selected = selected.at[rows, idx0].set(True)
     c0 = score_fn(query, idx0)                                 # (B, k_s)
-    cols0 = cur.gather_anchor_columns(
+    cols0 = quant.gather_columns(
         r_anc, idx0, via_onehot=cfg.distributed_gather
     )
 
@@ -387,7 +422,7 @@ def engine_search(
     n_filled = rounds_done * k_s
     valid_slot = jnp.arange(k_i) < n_filled                    # (k_i,)
     anchor_logits = jnp.where(valid_slot[None, :], c_test, sampling.NEG_INF)
-    s_hat = state.e_q @ r_anc if return_scores else None
+    s_hat = quant.matmul(state.e_q, r_anc) if return_scores else None
 
     # --- retrieval ---------------------------------------------------------
     if not cfg.split_budget:
@@ -406,12 +441,12 @@ def engine_search(
     k_r = cfg.budget_ce - k_i
     if cfg.use_fused_topk:
         _, rerank_idx = approx_topk_op(
-            state.e_q, r_anc, k=k_r, tile=cfg.fused_tile,
+            state.e_q, r_anc, k=k_r, tile=_effective_tile(cfg, r_anc),
             interpret=cfg.fused_interpret, n_valid=n_valid,
             **_fused_suppress(cfg, state, dyn_valid),
         )
     else:
-        full = s_hat if s_hat is not None else state.e_q @ r_anc
+        full = s_hat if s_hat is not None else quant.matmul(state.e_q, r_anc)
         masked = jnp.where(state.selected, sampling.NEG_INF, full)
         _, rerank_idx = jax.lax.top_k(masked, k_r)             # (B, k_r)
     rerank_scores = score_fn(query, rerank_idx)                # k_r CE calls
@@ -504,7 +539,23 @@ class _IndexBacked:
     whose fused TPU sampling suppresses via the compact anchor-id list
     instead of a (B, N) mask.  Removing items from an unpadded index flips
     it to the dynamic path (one retrace, then stable).
+
+    ``cfg.payload_dtype`` is applied to the index ONCE at construction
+    (:meth:`_apply_payload_policy`): the engine then receives an already
+    bf16/int8 payload operand and never re-converts per call.  An index that
+    is already quantized is authoritative and passes through unchanged.
     """
+
+    def _apply_payload_policy(self, cfg: AdaCURConfig) -> None:
+        idx = getattr(self, "index", None)
+        if idx is None or cfg.payload_dtype == "float32":
+            return
+        if idx.payload_dtype in (cfg.payload_dtype, "int8"):
+            # already compliant — or already quantized, which is
+            # authoritative (mirrors quant.as_payload: the policy converts
+            # payloads UP, it never dequantizes an int8 artifact)
+            return
+        self.index = idx.quantize(cfg.payload_dtype, tile=cfg.payload_tile)
 
     def _search_operands(self):
         if self.index is None:
@@ -536,6 +587,7 @@ class AdaCURRetriever(_IndexBacked):
     def __post_init__(self):
         if self.r_anc is None and self.index is None:
             raise ValueError("need r_anc or an AnchorIndex")
+        self._apply_payload_policy(self.cfg)
         self._run = make_engine(
             self.score_fn, self.cfg, self.n_valid_items, jit_compile=self.jit
         )
@@ -604,6 +656,7 @@ class ANNCURRetriever(_IndexBacked):
             k_retrieve=self.k_retrieve, pinv_rcond=self.pinv_rcond,
             round_epsilon=0.0, early_exit_tol=0.0,
         )
+        self._apply_payload_policy(self.cfg)
         self._run = make_engine(self.score_fn, self.cfg, jit_compile=self.jit)
 
     @classmethod
@@ -660,6 +713,7 @@ class RerankRetriever(_IndexBacked):
             first_round="retriever", k_retrieve=self.k_retrieve,
             round_epsilon=0.0, early_exit_tol=0.0,
         )
+        self._apply_payload_policy(self.cfg)
         # pure rerank never reads S_hat: skip the pinv/e_q machinery
         self._run = make_engine(
             self.score_fn, self.cfg, return_scores=False, jit_compile=self.jit
@@ -729,13 +783,14 @@ def round_body_bn_intermediates(
     TopK path must report 0 — the per-round claim behind the Fig. 4
     latency argument, checked by jaxpr inspection rather than trust.
     """
+    r_anc = quant.as_payload(r_anc, cfg.payload_dtype, cfg.payload_tile)
     k_q, n_items = r_anc.shape
     k_i = cfg.budget_ce if not cfg.split_budget else cfg.k_anchor
     k_s = k_i // cfg.n_rounds
     b = batch or jax.tree_util.tree_leaves(query)[0].shape[0]
     keys = jax.random.split(jax.random.PRNGKey(0), cfg.n_rounds + 1)
     body = _make_round_body(score_fn, r_anc, query, cfg, keys, k_s, None)
-    dtype = r_anc.dtype
+    dtype = jnp.float32
     state = EngineState(
         anchor_idx=jnp.zeros((b, k_i), jnp.int32),
         c_test=jnp.zeros((b, k_i), dtype),
@@ -746,3 +801,25 @@ def round_body_bn_intermediates(
     )
     closed = jax.make_jaxpr(lambda st: body(jnp.int32(1), st))(state)
     return _count_bn_floats(closed.jaxpr, b, n_items)
+
+
+def engine_slab_bytes(
+    cfg: AdaCURConfig, batch: int, n_items: int, k_q: int
+) -> dict:
+    """Device bytes of the engine's preallocated per-search state slabs.
+
+    The engine's whole working set is these six buffers (plus the payload it
+    streams); reporting them next to the index payload in BENCH_engine.json
+    tracks the memory story alongside latency as N scales.
+    """
+    k_i = cfg.budget_ce if not cfg.split_budget else cfg.k_anchor
+    slabs = {
+        "anchor_idx": batch * k_i * 4,
+        "c_test": batch * k_i * 4,
+        "a_buf": batch * k_q * k_i * 4,
+        "p": batch * k_i * k_q * 4,
+        "e_q": batch * k_q * 4,
+        "selected_mask": batch * n_items * 1,
+    }
+    slabs["total"] = sum(slabs.values())
+    return slabs

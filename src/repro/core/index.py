@@ -35,7 +35,7 @@ import json
 import os
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -45,13 +45,20 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..checkpoint.checkpointer import Checkpointer
 from ..compat import shard_map
 from ..distributed import sharding
+from ..kernels.approx_topk import quant
 from ..kernels.approx_topk.ops import approx_topk_op
+from ..kernels.approx_topk.quant import QuantizedRanc
 from . import cur
 
 # bulk_score_fn(query_ids (Q,), item_ids (N,)) -> (Q, N) exact scores
 BulkScoreFn = Callable[[jax.Array, jax.Array], jax.Array]
 
-INDEX_FORMAT_VERSION = 1
+# v2 adds the quantized payload (r_codes/r_scales leaves + payload meta).
+# Saves stamp v2 only when the payload is actually quantized — a plain fp32
+# index keeps the v1 on-disk layout byte-for-byte, so pre-v2 readers still
+# load it; this build reads both.
+INDEX_FORMAT_VERSION = 2
+_READABLE_FORMAT_VERSIONS = (1, 2)
 _META_FILE = "index_meta.json"
 _CKPT_STEP = 0
 
@@ -174,7 +181,9 @@ class AnchorIndex:
     array, so a retriever holding a mutated index never retraces.
     """
 
-    r_anc: jax.Array                 # (k_q, capacity) anchor-query scores
+    # (k_q, capacity) anchor-query scores: an fp32/bf16 array, or an int8
+    # QuantizedRanc payload (codes + per-item-tile scales) after quantize()
+    r_anc: Union[jax.Array, QuantizedRanc]
     anchor_query_ids: jax.Array      # (k_q,) int32 anchor query ids
     item_ids: jax.Array              # (capacity,) int32 external ids, -1 padding
     n_valid: jax.Array               # () int32 number of real items
@@ -192,6 +201,59 @@ class AnchorIndex:
     @property
     def capacity(self) -> int:
         return self.r_anc.shape[1]
+
+    @property
+    def payload_dtype(self) -> str:
+        """Storage dtype of the R_anc payload: float32 | bfloat16 | int8."""
+        return quant.payload_dtype_of(self.r_anc)
+
+    @property
+    def payload_nbytes(self) -> int:
+        """Device bytes of the R_anc payload (codes + scales when int8)."""
+        return int(self.r_anc.nbytes)
+
+    def _payload_leaf(self) -> jax.Array:
+        """The array whose NamedSharding carries the item-axis placement."""
+        return self.r_anc.codes if self._quantized else self.r_anc
+
+    @property
+    def _quantized(self) -> bool:
+        return isinstance(self.r_anc, QuantizedRanc)
+
+    # ---- payload dtype policy ---------------------------------------------
+
+    def quantize(
+        self, dtype: str = "int8", tile: int = quant.DEFAULT_TILE
+    ) -> "AnchorIndex":
+        """Re-encode the R_anc payload (``int8`` | ``bfloat16`` | ``float32``).
+
+        ``int8`` stores per-item-tile symmetric codes + fp32 scales (~4x
+        smaller; the fused kernel dequantizes tile-by-tile in registers).
+        ANNCUR latents, if present, stay fp32 — they are (k_i, capacity)
+        with k_i ≪ k_q and are not the memory bottleneck.  Quantizing an
+        already-int8 index with a different tile re-quantizes from the
+        dequantized codes (documented lossy; keep one tile per artifact).
+        """
+        if dtype not in quant.PAYLOAD_DTYPES:
+            raise ValueError(
+                f"unknown payload dtype '{dtype}' (one of {quant.PAYLOAD_DTYPES})"
+            )
+        cur_payload = self.r_anc
+        if dtype == self.payload_dtype and (
+            not self._quantized or cur_payload.tile == tile
+        ):
+            return self
+        dense = (
+            quant.dequantize(cur_payload) if self._quantized
+            else jnp.asarray(cur_payload, jnp.float32)
+        )
+        if dtype == "int8":
+            new = quant.quantize_ranc(dense, tile)
+        elif dtype == "bfloat16":
+            new = dense.astype(jnp.bfloat16)
+        else:
+            new = dense
+        return dataclasses.replace(self, r_anc=new)
 
     @property
     def n_items(self) -> int:
@@ -248,26 +310,42 @@ class AnchorIndex:
         block_rows: int = 64,
         checkpoint_dir: Optional[str] = None,
         capacity: Optional[int] = None,
+        payload_dtype: str = "float32",
+        payload_tile: int = quant.DEFAULT_TILE,
     ) -> "AnchorIndex":
-        """The offline indexing job: block-streamed, resumable R_anc build."""
+        """The offline indexing job: block-streamed, resumable R_anc build.
+
+        With ``payload_dtype`` the finished artifact is emitted directly in
+        the requested payload encoding (the fp32 row blocks themselves stay
+        the resumable checkpoint unit — per-item-tile scales span all k_q
+        rows, so quantization runs once over the assembled matrix)."""
         r_anc = build_r_anc(
             bulk_score_fn, anchor_query_ids, item_ids,
             block_rows=block_rows, checkpoint_dir=checkpoint_dir,
         )
-        return cls.from_r_anc(
+        idx = cls.from_r_anc(
             r_anc, anchor_query_ids=anchor_query_ids, item_ids=item_ids,
             capacity=capacity,
         )
+        return idx.quantize(payload_dtype, tile=payload_tile)
 
     def with_capacity(self, capacity: int) -> "AnchorIndex":
-        """Re-pad the item axis (must still hold all ``n_valid`` items)."""
+        """Re-pad the item axis (must still hold all ``n_valid`` items).
+
+        On a quantized payload only the padded tail changes, so every tile
+        covering the valid prefix keeps bit-identical codes and scales."""
         n = self.n_items
         if capacity < n:
             raise ValueError(f"capacity={capacity} < n_valid={n}")
+        if self._quantized:
+            dense = _pad_axis(quant.dequantize(self.r_anc)[:, :n], 1, capacity, 0)
+            r_anc = quant.requantize_preserving_prefix(self.r_anc, dense, n)
+        else:
+            r_anc = _pad_axis(self.r_anc[:, :n], 1, capacity, 0)
         emb = self.item_embeddings
         return dataclasses.replace(
             self,
-            r_anc=_pad_axis(self.r_anc[:, :n], 1, capacity, 0),
+            r_anc=r_anc,
             item_ids=_pad_axis(self.item_ids[:n], 0, capacity, -1),
             item_embeddings=(
                 None if emb is None else _pad_axis(emb[:, :n], 1, capacity, 0)
@@ -307,9 +385,10 @@ class AnchorIndex:
         ``U = pinv(R_anc[:, I_anc])`` and the latent item embeddings
         ``E_I = U @ R_anc`` (what :meth:`topk` searches over)."""
         idx = self.with_anchors(k_anchor=k_anchor, key=key, anchor_pos=anchor_pos)
-        u = cur.pinv(idx.r_anc[:, idx.anchor_item_pos], rcond)   # (k_i, k_q)
+        anchor_cols = quant.take_columns(idx.r_anc, idx.anchor_item_pos)
+        u = cur.pinv(anchor_cols, rcond)                         # (k_i, k_q)
         return dataclasses.replace(
-            idx, u=u, item_embeddings=u @ idx.r_anc
+            idx, u=u, item_embeddings=quant.matmul(u, idx.r_anc)
         )
 
     def query_embedding(self, c_anchor: jax.Array) -> jax.Array:
@@ -349,18 +428,27 @@ class AnchorIndex:
             if bulk_score_fn is None:
                 raise ValueError("need cols or bulk_score_fn")
             cols = bulk_score_fn(self.anchor_query_ids, new_item_ids)
-        cols = jnp.asarray(cols, self.r_anc.dtype)
+        cols = jnp.asarray(cols, jnp.float32)
         if cols.shape != (self.k_q, n_new):
             raise ValueError(f"cols {cols.shape} != ({self.k_q}, {n_new})")
+        if self._quantized:
+            # re-quantize only the tiles the new column range touches
+            r_anc = quant.update_columns(self.r_anc, cols, n0)
+        else:
+            r_anc = jax.lax.dynamic_update_slice(
+                self.r_anc, cols.astype(self.r_anc.dtype), (0, n0)
+            )
         emb = self.item_embeddings
         return dataclasses.replace(
             self,
-            r_anc=jax.lax.dynamic_update_slice(self.r_anc, cols, (0, n0)),
+            r_anc=r_anc,
             item_ids=jax.lax.dynamic_update_slice(self.item_ids, new_item_ids, (n0,)),
             n_valid=jnp.asarray(n0 + n_new, jnp.int32),
             item_embeddings=(
                 None if emb is None
-                else jax.lax.dynamic_update_slice(emb, self.u @ cols, (0, n0))
+                else jax.lax.dynamic_update_slice(
+                    emb, (self.u @ cols).astype(emb.dtype), (0, n0)
+                )
             ),
         )
 
@@ -368,7 +456,9 @@ class AnchorIndex:
         """Drop items by external id via *stable compaction*: surviving
         columns keep their relative order (so a removal is bit-identical to a
         from-scratch rebuild over the survivors), freed slots join the padded
-        tail, and shapes never change.  Host-side offline op."""
+        tail, and shapes never change.  On a quantized payload only the
+        tiles from the first removed column onward re-quantize — the prefix
+        keeps bit-identical codes and scales.  Host-side offline op."""
         cap = self.capacity
         rm = self.valid_mask() & jnp.isin(
             self.item_ids, jnp.asarray(remove_item_ids, jnp.int32)
@@ -381,10 +471,18 @@ class AnchorIndex:
         perm = jnp.argsort(rm.astype(jnp.int32), stable=True)  # survivors first, in order
         n1 = self.n_items - int(rm.sum())
         keep = jnp.arange(cap, dtype=jnp.int32) < n1
+        if self._quantized:
+            dense = quant.dequantize(self.r_anc)
+            dense = jnp.where(keep[None, :], dense[:, perm], 0)
+            # columns before the first removed position survive in place
+            first_rm = int(jnp.argmax(rm)) if n1 < self.n_items else cap
+            r_anc = quant.requantize_preserving_prefix(self.r_anc, dense, first_rm)
+        else:
+            r_anc = jnp.where(keep[None, :], self.r_anc[:, perm], 0)
         emb = self.item_embeddings
         new = dataclasses.replace(
             self,
-            r_anc=jnp.where(keep[None, :], self.r_anc[:, perm], 0),
+            r_anc=r_anc,
             item_ids=jnp.where(keep, self.item_ids[perm], -1),
             n_valid=jnp.asarray(n1, jnp.int32),
             item_embeddings=(
@@ -402,11 +500,15 @@ class AnchorIndex:
 
     def _tree(self) -> dict:
         t = {
-            "r_anc": self.r_anc,
             "anchor_query_ids": self.anchor_query_ids,
             "item_ids": self.item_ids,
             "n_valid": self.n_valid,
         }
+        if self._quantized:
+            t["r_codes"] = self.r_anc.codes
+            t["r_scales"] = self.r_anc.scales
+        else:
+            t["r_anc"] = self.r_anc
         if self.anchor_item_pos is not None:
             t["anchor_item_pos"] = self.anchor_item_pos
         if self.has_latents:
@@ -430,6 +532,8 @@ class AnchorIndex:
 
         defaults = {
             "r_anc": P(None, "data"),
+            "r_codes": P(None, "data"),        # co-sharded with r_scales:
+            "r_scales": P("data"),             # items axis == tiles axis
             "anchor_query_ids": P(),
             "item_ids": P("data"),
             "n_valid": P(),
@@ -441,12 +545,16 @@ class AnchorIndex:
         ck = Checkpointer(path, async_save=False)
         ck.save(_CKPT_STEP, tree, specs)
         meta = {
-            "format_version": INDEX_FORMAT_VERSION,
+            "format_version": INDEX_FORMAT_VERSION if self._quantized else 1,
             "k_q": self.k_q,
             "capacity": self.capacity,
             "n_items": self.n_items,
             "dtype": str(self.r_anc.dtype),
             "has_latents": self.has_latents,
+            "payload": {
+                "dtype": self.payload_dtype,
+                "tile": self.r_anc.tile if self._quantized else None,
+            },
         }
         tmp = os.path.join(path, _META_FILE + ".tmp")
         with open(tmp, "w") as f:
@@ -462,10 +570,10 @@ class AnchorIndex:
             raise FileNotFoundError(f"no AnchorIndex at {path!r} ({_META_FILE} missing)")
         with open(meta_path) as f:
             meta = json.load(f)
-        if meta.get("format_version") != INDEX_FORMAT_VERSION:
+        if meta.get("format_version") not in _READABLE_FORMAT_VERSIONS:
             raise ValueError(
                 f"unsupported AnchorIndex format version {meta.get('format_version')} "
-                f"(this build reads version {INDEX_FORMAT_VERSION})"
+                f"(this build reads versions {_READABLE_FORMAT_VERSIONS})"
             )
         with open(os.path.join(path, f"step_{_CKPT_STEP}", "manifest.json")) as f:
             manifest = json.load(f)
@@ -474,6 +582,13 @@ class AnchorIndex:
             for k, v in manifest["leaves"].items()
         }
         tree = Checkpointer(path, async_save=False).restore(_CKPT_STEP, like, mesh=mesh)
+        if "r_codes" in tree:
+            payload = meta.get("payload") or {}
+            tree["r_anc"] = QuantizedRanc(
+                codes=tree.pop("r_codes"),
+                scales=tree.pop("r_scales"),
+                tile=int(payload.get("tile") or quant.DEFAULT_TILE),
+            )
         return cls(**tree)
 
     # ---- sharding + sharded search -----------------------------------------
@@ -483,10 +598,13 @@ class AnchorIndex:
         shardable multiple if needed).  The placement lives in the arrays'
         own ``NamedSharding`` — it survives mutation (`add_items` etc.) and
         pytree ops — and :meth:`topk` reads it back to search under
-        ``shard_map``."""
+        ``shard_map``.  A quantized payload co-shards codes and scales: the
+        capacity aligns to ``mesh.size * tile`` so every shard owns whole
+        quantization tiles and their scales."""
         idx = self
-        if idx.capacity % mesh.size:
-            idx = idx.with_capacity(-(-idx.capacity // mesh.size) * mesh.size)
+        unit = mesh.size * (idx.r_anc.tile if idx._quantized else 1)
+        if idx.capacity % unit:
+            idx = idx.with_capacity(-(-idx.capacity // unit) * unit)
         spec = sharding.spec_for(
             mesh, ("anchor_q", "items"), (idx.k_q, idx.capacity), rules
         )
@@ -500,10 +618,18 @@ class AnchorIndex:
         def put(x, s):
             return jax.device_put(x, NamedSharding(mesh, s))
 
+        if idx._quantized:
+            r_anc = QuantizedRanc(
+                codes=put(idx.r_anc.codes, P(None, axes)),
+                scales=put(idx.r_anc.scales, P(axes)),
+                tile=idx.r_anc.tile,
+            )
+        else:
+            r_anc = put(idx.r_anc, P(None, axes))
         emb = idx.item_embeddings
         out = dataclasses.replace(
             idx,
-            r_anc=put(idx.r_anc, P(None, axes)),
+            r_anc=r_anc,
             anchor_query_ids=put(idx.anchor_query_ids, P()),
             item_ids=put(idx.item_ids, P(axes)),
             n_valid=put(idx.n_valid, P()),
@@ -520,7 +646,7 @@ class AnchorIndex:
     def _item_sharding(self) -> Tuple[Optional[Mesh], Optional[Tuple[str, ...]]]:
         """(mesh, item axes) read back from ``r_anc``'s NamedSharding, or
         (None, None) when the item axis is unsharded/replicated."""
-        sh = getattr(self.r_anc, "sharding", None)
+        sh = getattr(self._payload_leaf(), "sharding", None)
         if not isinstance(sh, NamedSharding) or sh.mesh.size == 1:
             return None, None
         spec = sh.spec
@@ -568,11 +694,17 @@ class AnchorIndex:
         n_local = self.capacity // n_shards
         if k > n_local:
             raise ValueError(f"k={k} > per-shard items {n_local}")
+        quantized = self._quantized
+        tile_q = self.r_anc.tile if quantized else 0
 
-        def body(eq, r_local, inv_local):
+        def body(eq, r_local, scales_local, inv_local):
             shard_id = jnp.int32(0)
             for a in axes:
                 shard_id = shard_id * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+            if quantized:
+                # codes + scales arrive co-sharded: the local slab is a
+                # self-contained payload over this shard's whole tiles
+                r_local = QuantizedRanc(r_local, scales_local, tile_q)
             mask = jnp.broadcast_to(inv_local[None, :], (eq.shape[0], n_local))
             v, i = approx_topk_op(
                 eq, r_local, None, k, tile=min(tile, n_local),
@@ -584,10 +716,14 @@ class AnchorIndex:
             vt, pos = jax.lax.top_k(vg, k)
             return vt, jnp.take_along_axis(ig, pos, axis=1)
 
+        if quantized:
+            payload_args = (self.r_anc.codes, self.r_anc.scales)
+        else:
+            payload_args = (self.r_anc, jnp.zeros((n_shards,), jnp.float32))
         fn = shard_map(
             body, mesh=mesh,
-            in_specs=(P(), P(None, axes), P(axes)),
+            in_specs=(P(), P(None, axes), P(axes), P(axes)),
             out_specs=(P(), P()),
             check_vma=False,
         )
-        return fn(e_q, self.r_anc, invalid)
+        return fn(e_q, *payload_args, invalid)

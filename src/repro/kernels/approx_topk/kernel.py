@@ -43,8 +43,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def pad_to_tile(tile: int, r_anc, noise=None, mask=None):
-    """Zero-pad the item axis to a tile multiple (shared by both backends)."""
+def pad_to_tile(tile: int, r_anc, noise=None, mask=None, scales=None):
+    """Zero-pad the item axis to a tile multiple (shared by both backends).
+
+    ``scales`` is the optional (N,) per-column dequantization scale vector of
+    an int8 payload; padded columns carry scale 1.0 (their codes pad to 0,
+    so the padded scores are exact zeros and the n_items bound masks them).
+    """
     n = r_anc.shape[1]
     n_pad = pl.cdiv(n, tile) * tile
     if n_pad != n:
@@ -52,30 +57,40 @@ def pad_to_tile(tile: int, r_anc, noise=None, mask=None):
         r_anc = jnp.pad(r_anc, pad)
         noise = jnp.pad(noise, pad) if noise is not None else None
         mask = jnp.pad(mask, pad) if mask is not None else None
-    return r_anc, noise, mask, n_pad
+        if scales is not None:
+            scales = jnp.pad(scales, (0, n_pad - n), constant_values=1.0)
+    return r_anc, noise, mask, scales, n_pad
 
 
 def _approx_topk_kernel(
     e_q_ref,        # (B, k_q)
-    r_anc_ref,      # (k_q, T)
+    r_anc_ref,      # (k_q, T) — fp32/bf16 scores or int8 quantized codes
     anchors_ref,    # (B, A) int32 — already-selected anchor ids (global)
-    *rest,          # [noise_ref (B,T)] [mask_ref (B,T)] vals_ref, idx_ref
+    *rest,          # [scales_ref (1,T)] [noise_ref (B,T)] [mask_ref (B,T)]
+                    # vals_ref, idx_ref
     tile: int,
     k: int,
     n_items: int,
+    has_scales: bool,
     has_noise: bool,
     has_mask: bool,
 ):
     it = iter(rest)
+    scales_ref = next(it) if has_scales else None
     noise_ref = next(it) if has_noise else None
     mask_ref = next(it) if has_mask else None
     vals_ref, idx_ref = next(it), next(it)
     ti = pl.program_id(0)
     e_q = e_q_ref[...].astype(jnp.float32)                 # (B, k_q)
+    # fused dequant front end: an int8 tile widens in registers; the
+    # per-column scale factors out of the contraction and multiplies the
+    # (B, T) GEMM output, so the fp32 R_anc tile never exists in memory.
     r = r_anc_ref[...].astype(jnp.float32)                 # (k_q, T)
     scores = jax.lax.dot_general(
         e_q, r, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )                                                       # (B, T)
+    if scales_ref is not None:
+        scores = scores * scales_ref[...]                  # (1, T) broadcast
     if noise_ref is not None:
         scores = scores + noise_ref[...].astype(jnp.float32)
     b = scores.shape[0]
@@ -108,7 +123,7 @@ def _approx_topk_kernel(
 
 def approx_topk_tiles(
     e_q: jax.Array,        # (B, k_q) f32
-    r_anc: jax.Array,      # (k_q, N)
+    r_anc: jax.Array,      # (k_q, N) scores — or int8 codes (pass scales)
     anchors: jax.Array,    # (B, A) int32 — global ids to mask (pad with -1)
     k: int,
     *,
@@ -117,15 +132,19 @@ def approx_topk_tiles(
     noise: jax.Array | None = None,   # (B, N) additive noise (Gumbel sampling)
     mask: jax.Array | None = None,    # (B, N) bool — True = suppress
     n_valid: int | None = None,       # real item count when N is padded
+    scales: jax.Array | None = None,  # (N,) per-column dequant scales (int8)
 ):
     """Returns per-tile (vals (B, n_tiles, k), idx (B, n_tiles, k))."""
     b, k_q = e_q.shape
     _, n = r_anc.shape
-    r_anc, noise, mask, n_pad = pad_to_tile(tile, r_anc, noise, mask)
+    r_anc, noise, mask, scales, n_pad = pad_to_tile(
+        tile, r_anc, noise, mask, scales
+    )
     n_tiles = n_pad // tile
     kernel = functools.partial(
         _approx_topk_kernel, tile=tile, k=k,
         n_items=n if n_valid is None else min(n_valid, n),
+        has_scales=scales is not None,
         has_noise=noise is not None, has_mask=mask is not None,
     )
     in_specs = [
@@ -134,6 +153,9 @@ def approx_topk_tiles(
         pl.BlockSpec(anchors.shape, lambda ti: (0, 0)),
     ]
     inputs = [e_q, r_anc, anchors]
+    if scales is not None:
+        in_specs.append(pl.BlockSpec((1, tile), lambda ti: (0, ti)))
+        inputs.append(scales[None, :])
     for extra in (noise, mask):
         if extra is not None:
             in_specs.append(pl.BlockSpec((b, tile), lambda ti: (0, ti)))

@@ -14,6 +14,22 @@ behavior (no (B, N) float score matrix is ever formed):
 
 ``impl='auto'`` picks ``scan`` when ``interpret`` is requested (CPU
 emulation) and the real kernel otherwise.
+
+**Quantized payloads.**  ``r_anc`` may be a
+:class:`~repro.kernels.approx_topk.quant.QuantizedRanc` (int8 codes +
+per-item-tile fp32 scales).  Both backends then run a fused dequant-matmul
+front end: each grid step loads an int8 tile, widens it in registers,
+contracts with ``e_q`` in fp32 accumulation, and applies the per-column
+scale to the (B, T) GEMM output — on TPU that is ~4x fewer HBM bytes per
+step, and the fp32 R_anc never exists anywhere.
+
+**Deterministic tie-breaking.**  Exact score ties break by ascending item
+index, in both backends: per tile the selection is index-stable
+(``lax.top_k`` prefers the lower index; the kernel's iterative argmax takes
+the first occurrence), and the cross-tile merge flattens tiles in ascending
+order so ``lax.top_k`` over the flat buffer again prefers the lower global
+id.  Fused and dense rankings are therefore bit-equal whenever their scores
+are (asserted by the kernel parity tests), not merely set-equal.
 """
 
 from __future__ import annotations
@@ -24,9 +40,11 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import NEG_INF, approx_topk_tiles, pad_to_tile
+from .quant import QuantizedRanc
 
 
-def _scan_topk_tiles(e_q, r_anc, anchors, k, tile, noise, mask, n_valid):
+def _scan_topk_tiles(e_q, r_anc, anchors, k, tile, noise, mask, n_valid,
+                     scales=None):
     """lax.scan tiled reference with kernel-identical tie-breaks.
 
     ``tile`` is rebalanced so the last tile carries at most n_tiles-1 padded
@@ -34,12 +52,17 @@ def _scan_topk_tiles(e_q, r_anc, anchors, k, tile, noise, mask, n_valid):
     work — 23% at N=10k, tile=4096); a modest unroll amortizes the scan's
     per-step dispatch on CPU.  ``anchors=None`` skips the id-compare
     entirely — callers that maintain a (B, N) selected mask pass that
-    instead (O(B·T) per tile vs O(B·T·A))."""
+    instead (O(B·T) per tile vs O(B·T·A)).  ``scales`` (N,), when given, is
+    the int8 payload's per-column dequant scale, applied to each tile's GEMM
+    output (scale rebalancing is free: scales are per *column*, so the scan
+    tile width need not match the payload's quantization tile)."""
     b, k_q = e_q.shape
     n = r_anc.shape[1]
     n_tiles = -(-n // tile)
     tile = -(-n // n_tiles)
-    r_anc, noise, mask, n_pad = pad_to_tile(tile, r_anc, noise, mask)
+    r_anc, noise, mask, scales, n_pad = pad_to_tile(
+        tile, r_anc, noise, mask, scales
+    )
     n_eff = n if n_valid is None else min(n_valid, n)
     e_q32 = e_q.astype(jnp.float32)
     arange_t = jnp.arange(tile, dtype=jnp.int32)
@@ -47,6 +70,10 @@ def _scan_topk_tiles(e_q, r_anc, anchors, k, tile, noise, mask, n_valid):
     def step(_, lo):
         r_tile = jax.lax.dynamic_slice(r_anc, (0, lo), (k_q, tile))
         scores = e_q32 @ r_tile.astype(jnp.float32)            # (B, tile)
+        if scales is not None:
+            scores = scores * jax.lax.dynamic_slice(
+                scales, (lo,), (tile,)
+            )[None, :]
         if noise is not None:
             scores = scores + jax.lax.dynamic_slice(
                 noise, (0, lo), (b, tile)
@@ -87,6 +114,9 @@ def approx_topk_op(
 ):
     """Fused  top-k(mask(e_q @ R_anc [+ noise]))  ->  (vals (B,k), idx (B,k)).
 
+    ``r_anc`` is the (k_q, N) score matrix — fp32, bf16, or an int8
+    :class:`QuantizedRanc` payload (dequantized tile-by-tile inside the
+    kernel; see module docstring).
     ``anchors`` (B, A) are suppressed item ids (pad with -1; None = none);
     ``mask`` (B, N) bool additionally suppresses where True (cheaper than a
     long anchor list when the caller already maintains a selected-mask).
@@ -94,25 +124,32 @@ def approx_topk_op(
     passing Gumbel noise makes this an exact sample without replacement from
     softmax(S_hat) (Kool et al. 2019) with S_hat never materialized.
     ``n_valid`` suppresses padded item ids >= n_valid.
+    Exact score ties break deterministically by ascending item index.
     """
+    if isinstance(r_anc, QuantizedRanc):
+        codes, scales = r_anc.codes, r_anc.col_scales()
+    else:
+        codes, scales = r_anc, None
     if impl == "auto":
         impl = "scan" if interpret else "pallas"
     if impl == "scan":
         vals, idx = _scan_topk_tiles(
-            e_q, r_anc, anchors, k, tile, noise, mask, n_valid
+            e_q, codes, anchors, k, tile, noise, mask, n_valid, scales=scales
         )
     elif impl == "pallas":
         if anchors is None:
             anchors = jnp.full((e_q.shape[0], 1), -1, jnp.int32)
         vals, idx = approx_topk_tiles(
-            e_q, r_anc, anchors, k, tile=tile, interpret=interpret,
-            noise=noise, mask=mask, n_valid=n_valid,
+            e_q, codes, anchors, k, tile=tile, interpret=interpret,
+            noise=noise, mask=mask, n_valid=n_valid, scales=scales,
         )
     else:
         raise ValueError(f"unknown impl '{impl}'")
     b, n_tiles, _ = vals.shape
+    # merge: n_tiles*k ≪ N.  Tiles flatten in ascending order and lax.top_k
+    # is index-stable, so equal values resolve to the lowest global id.
     flat_v = vals.reshape(b, n_tiles * k)
     flat_i = idx.reshape(b, n_tiles * k)
-    top_v, pos = jax.lax.top_k(flat_v, k)                  # merge: n_tiles*k ≪ N
+    top_v, pos = jax.lax.top_k(flat_v, k)
     top_i = jnp.take_along_axis(flat_i, pos, axis=1)
     return top_v, top_i

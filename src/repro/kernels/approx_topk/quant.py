@@ -1,0 +1,247 @@
+"""Quantized anchor-payload subsystem: int8 codes + per-item-tile scales.
+
+At the ROADMAP's "millions of items" scale the offline artifact — the
+(k_q, N) anchor score matrix ``R_anc`` — is the memory bottleneck, exactly
+the gap arXiv 2405.03651 identifies over ANNCUR: fp32 R_anc at k_q=500,
+N=10^6 is 2 GB, and the engine streams all of it over the item axis twice
+per round.  This module stores R_anc as
+
+- ``codes``  (k_q, N) int8 — symmetric round-to-nearest quantization, and
+- ``scales`` (ceil(N / tile),) fp32 — one scale per *item tile*, shared by
+  all k_q rows of that tile (``scale = amax_tile / 127``),
+
+a ~4x payload shrink (codes are 1/4 the bytes; scales add 4 / tile bytes
+per item).  Scores dequantize per column:  ``S_hat[:, j] = (e_q @
+codes[:, j]) * scales[j // tile]`` — algebraically the scale factors out of
+the contraction, so the fused kernel applies it to the (B, T) GEMM *output*
+in registers and the fp32 R_anc never exists anywhere.
+
+Tile-local scales make mutation cheap: ``add_items``/``remove_items``
+re-quantize only the tiles whose columns changed (see
+:func:`update_columns` / :func:`requantize_preserving_prefix`), so
+untouched tiles keep bit-identical codes *and* scales across a mutation
+round-trip.
+
+Everything here is dtype-polymorphic over the three payload policies
+(``AdaCURConfig.payload_dtype``): plain fp32 arrays, bf16 arrays, and
+:class:`QuantizedRanc`.  The engine and the fused ``approx_topk`` op call
+the dispatchers (:func:`matmul`, :func:`gather_columns`, ...) and never
+branch on the payload type themselves.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+PAYLOAD_DTYPES = ("float32", "bfloat16", "int8")
+DEFAULT_TILE = 512
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("codes", "scales"),
+    meta_fields=("tile",),
+)
+@dataclass
+class QuantizedRanc:
+    """int8 anchor payload: per-item-tile symmetric quantization of R_anc.
+
+    ``codes[q, j] * scales[j // tile]`` reconstructs entry (q, j); an
+    all-zero tile stores scale 1.0 so dequantization is always exact zeros
+    there (padded capacity tails stay exact).  ``tile`` is pytree metadata,
+    so payloads with equal tile hash/trace identically under jit.
+    """
+
+    codes: jax.Array     # (k_q, N) int8
+    scales: jax.Array    # (ceil(N / tile),) float32
+    tile: int
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def dtype(self):
+        """The *compute* dtype — everything dequantizes into fp32."""
+        return jnp.dtype(jnp.float32)
+
+    @property
+    def nbytes(self) -> int:
+        return self.codes.nbytes + self.scales.nbytes
+
+    @property
+    def n_tiles(self) -> int:
+        return self.scales.shape[0]
+
+    def col_scales(self) -> jax.Array:
+        """(N,) per-column fp32 scales (tile scales expanded)."""
+        n = self.codes.shape[1]
+        full = jnp.repeat(
+            self.scales, self.tile, total_repeat_length=self.n_tiles * self.tile
+        )
+        return full[:n]
+
+
+def payload_dtype_of(r_anc) -> str:
+    """The policy name of a payload operand ("float32"/"bfloat16"/"int8")."""
+    if isinstance(r_anc, QuantizedRanc):
+        return "int8"
+    return str(jnp.asarray(r_anc).dtype)
+
+
+def quantize_ranc(r_anc: jax.Array, tile: int = DEFAULT_TILE) -> QuantizedRanc:
+    """Symmetric per-item-tile int8 quantization (round to nearest).
+
+    Deterministic: re-quantizing a dequantized payload whose tile scale is
+    unchanged recovers the codes bit-exactly (|codes| <= 127, so the
+    round-trip error is far below the 0.5 rounding radius).
+    """
+    x = jnp.asarray(r_anc, jnp.float32)
+    k_q, n = x.shape
+    n_tiles = -(-n // tile)
+    n_pad = n_tiles * tile
+    if n_pad != n:
+        x = jnp.pad(x, ((0, 0), (0, n_pad - n)))
+    amax = jnp.max(jnp.abs(x.reshape(k_q, n_tiles, tile)), axis=(0, 2))
+    scales = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    col = jnp.repeat(scales, tile, total_repeat_length=n_pad)
+    codes = jnp.clip(jnp.round(x / col[None, :]), -127, 127).astype(jnp.int8)
+    return QuantizedRanc(codes=codes[:, :n], scales=scales, tile=tile)
+
+
+def dequantize(payload: QuantizedRanc) -> jax.Array:
+    """(k_q, N) fp32 reconstruction — offline/debug only, never the hot path."""
+    return payload.codes.astype(jnp.float32) * payload.col_scales()[None, :]
+
+
+def as_payload(r_anc, payload_dtype: str, tile: int = DEFAULT_TILE):
+    """Apply the config's payload policy to a raw operand.
+
+    A plain array is converted *up* to the requested payload (bf16 cast or
+    int8 quantization — traced, so bare-r_anc retrievers pay the conversion
+    per call; index-backed retrievers pre-quantize via
+    ``AnchorIndex.quantize`` and skip this).  An operand that is already a
+    :class:`QuantizedRanc` is authoritative and passes through unchanged.
+    """
+    if payload_dtype not in PAYLOAD_DTYPES:
+        raise ValueError(
+            f"unknown payload_dtype '{payload_dtype}' (one of {PAYLOAD_DTYPES})"
+        )
+    if isinstance(r_anc, QuantizedRanc) or payload_dtype == "float32":
+        return r_anc
+    if payload_dtype == "bfloat16":
+        return jnp.asarray(r_anc).astype(jnp.bfloat16)
+    return quantize_ranc(r_anc, tile)
+
+
+def matmul(e_q: jax.Array, r_anc) -> jax.Array:
+    """Dense ``e_q @ R_anc`` -> (B, N) fp32 for any payload type.
+
+    This is the *dense* engine path (and the oracle the fused kernels are
+    tested against); the per-column scale is applied to the GEMM output, the
+    same factoring the kernels use, so dense and fused scores agree.
+    """
+    if isinstance(r_anc, QuantizedRanc):
+        s = e_q.astype(jnp.float32) @ r_anc.codes.astype(jnp.float32)
+        return s * r_anc.col_scales()[None, :]
+    return e_q.astype(jnp.float32) @ jnp.asarray(r_anc).astype(jnp.float32)
+
+
+def take_columns(r_anc, pos: jax.Array) -> jax.Array:
+    """R_anc[:, pos] -> (k_q, k) fp32 for an unbatched position vector."""
+    if isinstance(r_anc, QuantizedRanc):
+        cols = jnp.take(r_anc.codes, pos, axis=1).astype(jnp.float32)
+        return cols * r_anc.scales[pos // r_anc.tile][None, :]
+    return jnp.take(jnp.asarray(r_anc), pos, axis=1).astype(jnp.float32)
+
+
+def gather_columns(r_anc, anchor_idx: jax.Array, via_onehot: bool = False):
+    """R_anc[:, I_anc] for a batch of per-query anchor sets -> (B, k_q, k) fp32.
+
+    The payload-aware twin of ``cur.gather_anchor_columns`` — dequantizes
+    exactly the gathered columns (k columns, not N).  ``via_onehot``
+    expresses the gather as a one-hot matmul for column-sharded payloads
+    (see cur.py for why).
+    """
+    if not isinstance(r_anc, QuantizedRanc):
+        r = jnp.asarray(r_anc)
+        if via_onehot:
+            n = r.shape[1]
+            onehot = (
+                anchor_idx[:, None, :] == jnp.arange(n)[None, :, None]
+            ).astype(jnp.float32)
+            return jnp.einsum("qn,bnk->bqk", r.astype(jnp.float32), onehot)
+        return jnp.swapaxes(r.T[anchor_idx], 1, 2).astype(jnp.float32)
+    scale = r_anc.scales[anchor_idx // r_anc.tile]            # (B, k)
+    if via_onehot:
+        n = r_anc.codes.shape[1]
+        onehot = (
+            anchor_idx[:, None, :] == jnp.arange(n)[None, :, None]
+        ).astype(jnp.float32)
+        cols = jnp.einsum(
+            "qn,bnk->bqk", r_anc.codes.astype(jnp.float32), onehot
+        )
+    else:
+        cols = jnp.swapaxes(r_anc.codes.T[anchor_idx], 1, 2).astype(jnp.float32)
+    return cols * scale[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Tile-local mutation: re-quantize ONLY the touched tiles.
+# ---------------------------------------------------------------------------
+
+
+def dequantize_slice(payload: QuantizedRanc, lo: int, hi: int) -> jax.Array:
+    """fp32 reconstruction of columns [lo, hi) — lo/hi concrete host ints."""
+    codes = jax.lax.slice_in_dim(payload.codes, lo, hi, axis=1)
+    return codes.astype(jnp.float32) * payload.col_scales()[lo:hi][None, :]
+
+
+def update_columns(
+    payload: QuantizedRanc, cols: jax.Array, start: int
+) -> QuantizedRanc:
+    """Overwrite columns [start, start + m) with fp32 ``cols``, re-quantizing
+    only the tiles that range touches (``add_items``' hot path).  Codes in a
+    touched tile whose scale is unchanged by the new columns re-quantize
+    bit-identically; tiles outside the range are returned byte-for-byte.
+    """
+    k_q, m = cols.shape
+    tile = payload.tile
+    n = payload.codes.shape[1]
+    t0 = start // tile
+    t1 = -(-(start + m) // tile)                   # exclusive touched-tile end
+    lo, hi = t0 * tile, min(t1 * tile, n)
+    region = dequantize_slice(payload, lo, hi)
+    region = jax.lax.dynamic_update_slice(
+        region, jnp.asarray(cols, jnp.float32), (0, start - lo)
+    )
+    sub = quantize_ranc(region, tile)
+    codes = jax.lax.dynamic_update_slice(payload.codes, sub.codes, (0, lo))
+    scales = jax.lax.dynamic_update_slice(payload.scales, sub.scales, (t0,))
+    return QuantizedRanc(codes=codes, scales=scales, tile=tile)
+
+
+def requantize_preserving_prefix(
+    old: QuantizedRanc, new_f32: jax.Array, first_touched_col: int
+) -> QuantizedRanc:
+    """Quantize ``new_f32``, then restore the bytes of every tile strictly
+    before the first touched column from ``old`` (they are guaranteed
+    value-identical, and this guarantees them *bit*-identical — fp scale
+    recomputation could otherwise drift an ulp).
+
+    Used by ``remove_items`` (stable compaction leaves the prefix before the
+    first removed column in place) and ``with_capacity`` (only the padded
+    tail changes).  ``new_f32`` may have a different width than ``old``.
+    """
+    newp = quantize_ranc(new_f32, old.tile)
+    t0 = min(first_touched_col // old.tile, old.n_tiles, newp.n_tiles)
+    keep = t0 * old.tile
+    if keep == 0:
+        return newp
+    codes = newp.codes.at[:, :keep].set(old.codes[:, :keep])
+    scales = newp.scales.at[:t0].set(old.scales[:t0])
+    return QuantizedRanc(codes=codes, scales=scales, tile=old.tile)

@@ -25,7 +25,8 @@ The production serving loop the paper's technique plugs into:
 
 CLI:  PYTHONPATH=src python -m repro.launch.serve --requests 64 \
           --retriever {adacur,anncur,rerank} [--index-path DIR] \
-          [--scorer {synthetic,real-ce}] [--cache]
+          [--scorer {synthetic,real-ce}] [--cache] \
+          [--payload-dtype {float32,bfloat16,int8}]
 """
 
 from __future__ import annotations
@@ -295,6 +296,11 @@ def main() -> None:
                          "the flash-attention path)")
     ap.add_argument("--cache", action="store_true",
                     help="wrap the scorer in a (query, item) score cache")
+    ap.add_argument("--payload-dtype", choices=("float32", "bfloat16", "int8"),
+                    default="float32",
+                    help="storage/streaming dtype of the R_anc payload: int8 "
+                         "stores per-tile codes+scales (~4x smaller index, "
+                         "fused dequant in the kernel)")
     args = ap.parse_args()
 
     from ..data.synthetic import make_synthetic_ce
@@ -332,8 +338,13 @@ def main() -> None:
     cfg = AdaCURConfig(
         k_anchor=args.budget // 2, n_rounds=args.rounds, budget_ce=args.budget,
         strategy="topk", k_retrieve=100, loop_mode="fori",
-        use_fused_topk=args.fused,
+        use_fused_topk=args.fused, payload_dtype=args.payload_dtype,
     )
+    if args.payload_dtype != "float32":
+        fp32_bytes = index.payload_nbytes
+        index = index.quantize(args.payload_dtype, tile=cfg.payload_tile)
+        print(f"payload {args.payload_dtype}: {index.payload_nbytes / 1e6:.1f} MB "
+              f"(fp32 would be {fp32_bytes / 1e6:.1f} MB)")
     from ..core.scorer import CachingScorer, SyntheticScorer, TabulatedScorer
 
     if args.cache:
@@ -427,7 +438,7 @@ def _serve_real_ce(args) -> None:
     cfg = AdaCURConfig(
         k_anchor=args.budget // 2, n_rounds=args.rounds, budget_ce=args.budget,
         strategy="topk", k_retrieve=50, loop_mode="fori",
-        use_fused_topk=args.fused,
+        use_fused_topk=args.fused, payload_dtype=args.payload_dtype,
     )
     retriever = make_retriever(args.retriever, index, scorer, cfg)
     svc = AdaCURService(retriever=retriever, max_batch=args.batch)

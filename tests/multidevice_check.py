@@ -244,6 +244,42 @@ def check_anchor_index_shard(mesh):
     print("anchor_index_shard: OK")
 
 
+def check_quantized_index_shard(mesh):
+    """shard(mesh) on an int8 payload: codes and scales must land co-sharded
+    on the item axis (whole quantization tiles per shard), and the sharded
+    fused-dequant top-k must match the unsharded quantized index exactly."""
+    from repro.core.index import AnchorIndex
+    from repro.kernels.approx_topk.quant import QuantizedRanc
+
+    tile = 16
+    r = jax.random.normal(jax.random.PRNGKey(0), (24, 1000))
+    index = AnchorIndex.from_r_anc(r, capacity=1024).quantize("int8", tile=tile)
+    sharded = index.shard(mesh)
+    assert isinstance(sharded.r_anc, QuantizedRanc)
+    assert sharded._item_sharding()[1] == ("data", "model"), (
+        sharded._item_sharding()
+    )
+    # co-sharding: each shard owns whole tiles and exactly their scales
+    n_shards = mesh.size
+    assert sharded.capacity % (n_shards * tile) == 0
+    codes_spec = sharded.r_anc.codes.sharding.spec
+    scales_spec = sharded.r_anc.scales.sharding.spec
+    assert tuple(codes_spec[1]) == ("data", "model"), codes_spec
+    assert tuple(scales_spec[0]) == ("data", "model"), scales_spec
+
+    e_q = jax.random.normal(jax.random.PRNGKey(1), (5, 24))
+    v0, i0 = index.topk(e_q, 10, tile=128)
+    v1, i1 = sharded.topk(e_q, 10, tile=128)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(v0), np.asarray(v1), **TOL)
+
+    # mutation keeps the co-sharded placement
+    mutated = sharded.add_items(jnp.arange(1000, 1010),
+                                cols=jnp.zeros((24, 10)))
+    assert mutated._item_sharding()[1] == ("data", "model")
+    print("quantized_index_shard: OK")
+
+
 if __name__ == "__main__":
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     check_decode_attention(mesh)
@@ -252,4 +288,5 @@ if __name__ == "__main__":
     check_pipeline(mesh)
     check_cross_pod_reduce()
     check_anchor_index_shard(mesh)
+    check_quantized_index_shard(mesh)
     print("ALL MULTIDEVICE CHECKS PASSED")

@@ -129,17 +129,21 @@ class TestScoredPairInvariants:
         split=st.booleans(),
         strategy=st.sampled_from(["topk", "softmax"]),
         epsilon=st.sampled_from([0.0, 0.25]),
+        payload=st.sampled_from(["float32", "int8"]),
         seed=st.integers(min_value=0, max_value=2**31 - 1),
     )
     def test_dedup_and_exact_call_count(self, dom, mode, split, strategy,
-                                        epsilon, seed):
+                                        epsilon, payload, seed):
         """(b) + (c) in one engine run: every scored (query, item) pair is
         unique within its search row, and the measured total equals the
-        plan for the rounds actually executed."""
+        plan for the rounds actually executed.  Holds unchanged under the
+        int8 quantized payload: quantization perturbs *which* items the
+        approximation proposes, never the dedup/suppression bookkeeping or
+        the budget accounting."""
         cfg = AdaCURConfig(
             k_anchor=16, n_rounds=4, budget_ce=32 if split else 16,
             split_budget=split, strategy=strategy, round_epsilon=epsilon,
-            k_retrieve=8,
+            k_retrieve=8, payload_dtype=payload, payload_tile=64,
             loop_mode="unrolled" if mode == "unrolled" else "fori",
             early_exit_tol=0.4 if mode == "early" else 0.0,
         )
@@ -164,6 +168,28 @@ class TestScoredPairInvariants:
         )
         # the planned budget the result reports stays an upper bound
         assert ce_call_plan(cfg, rounds_done) <= res.ce_calls
+
+    @pytest.mark.parametrize("mode", ["unrolled", "fori", "early"])
+    def test_int8_payload_invariants_every_loop_mode(self, dom, mode):
+        """Deterministic coverage of the acceptance property: measured ==
+        planned CE calls and no-pair-scored-twice hold under
+        ``payload_dtype=int8`` in every loop mode (hypothesis sampling above
+        may or may not draw each combination)."""
+        cfg = AdaCURConfig(
+            k_anchor=16, n_rounds=4, budget_ce=32, split_budget=True,
+            k_retrieve=8, payload_dtype="int8", payload_tile=64,
+            loop_mode="unrolled" if mode == "unrolled" else "fori",
+            early_exit_tol=0.4 if mode == "early" else 0.0,
+        )
+        scorer = TabulatedScorer(dom["m"], record_pairs=True)
+        run = engine.make_engine(scorer, cfg)
+        res = jax.block_until_ready(
+            run(dom["r_anc"], dom["test_q"], jax.random.PRNGKey(123))
+        )
+        for r, pairs in _pair_sets_per_row(scorer.call_log).items():
+            assert len(pairs) == len(set(pairs)), f"row {r}: pair scored twice"
+        planned = ce_call_plan(cfg, int(res.rounds_done)) * N_TEST_Q
+        assert scorer.stats.ce_calls == planned
 
     @_settings(max_examples=4)
     @given(

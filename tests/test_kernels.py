@@ -12,6 +12,7 @@ except ModuleNotFoundError:  # hermetic container: deterministic fallback
     from _hypothesis_fallback import given, settings, st
 from numpy.testing import assert_allclose
 
+from repro.kernels.approx_topk import quant
 from repro.kernels.approx_topk.ops import approx_topk_op
 from repro.kernels.approx_topk.ref import approx_topk_reference
 from repro.kernels.embedding_bag.ops import embedding_bag_op
@@ -117,6 +118,9 @@ class TestApproxTopK:
         v1, i1 = approx_topk_op(e_q, r, anchors, k, tile=tile, interpret=True, impl=impl)
         v2, i2 = approx_topk_reference(e_q, r, anchors, k)
         assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-4, rtol=1e-4)
+        # fused and dense rankings are BIT-equal, not merely set-equal:
+        # per-column dots agree bitwise and ties break by ascending index
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
         # anchor masking property: no returned id may be a masked anchor
         hits = (np.asarray(i1)[:, :, None] == np.asarray(anchors)[:, None, :]).any()
         assert not hits
@@ -148,6 +152,68 @@ class TestApproxTopK:
         assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-4, rtol=1e-4)
         assert (np.asarray(i1) < 800).all()
         assert not np.asarray(jnp.take_along_axis(mask, i1, axis=1)).any()
+
+    @pytest.mark.parametrize("impl", ["pallas", "scan"])
+    def test_exact_tie_break_by_ascending_index(self, impl):
+        """Exact score ties (integer-valued inputs: the GEMM is exact) must
+        resolve deterministically by ascending item index, bit-equal to the
+        dense reference — within a tile, across tiles, and in the merge."""
+        kq, n, k = 8, 777, 40
+        e_q = jnp.ones((2, kq), jnp.float32)
+        # scores cycle through 4 exact levels -> ~194 exact ties per level
+        levels = jnp.arange(n, dtype=jnp.float32) % 4
+        r = jnp.broadcast_to(levels[None, :], (kq, n))
+        v1, i1 = approx_topk_op(e_q, r, None, k, tile=128, interpret=True,
+                                impl=impl)
+        v2, i2 = approx_topk_reference(
+            e_q, r, jnp.full((2, 1), -1, jnp.int32), k
+        )
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+        # the contract itself: equal-valued winners appear in id order
+        i1, v1 = np.asarray(i1), np.asarray(v1)
+        for row_v, row_i in zip(v1, i1):
+            for lvl in np.unique(row_v):
+                ids = row_i[row_v == lvl]
+                assert (np.diff(ids) > 0).all(), (lvl, ids)
+
+    @pytest.mark.parametrize("impl", ["pallas", "scan"])
+    def test_quantized_payload_matches_reference(self, impl):
+        """int8 payload: fused dequant-matmul == dequantized dense oracle,
+        bit-equal rankings, and the payload really is ~4x smaller."""
+        ks = jax.random.split(jax.random.PRNGKey(11), 3)
+        e_q = jax.random.normal(ks[0], (3, 48))
+        r = jax.random.normal(ks[1], (48, 1333))
+        p = quant.quantize_ranc(r, tile=96)
+        assert p.nbytes < 0.3 * r.nbytes
+        # quantization error bound: half an lsb per entry
+        err = jnp.abs(quant.dequantize(p) - r)
+        assert float(err.max()) <= float(p.col_scales().max()) * 0.5 + 1e-6
+        anchors = jax.random.randint(ks[2], (3, 6), 0, 1333)
+        v1, i1 = approx_topk_op(e_q, p, anchors, 16, tile=256, interpret=True,
+                                impl=impl)
+        v2, i2 = approx_topk_reference(e_q, p, anchors, 16)
+        assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-5, rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+    @pytest.mark.parametrize("impl", ["pallas", "scan"])
+    def test_quantized_payload_with_noise_mask_n_valid(self, impl):
+        """The full input surface (Gumbel noise + dense mask + n_valid)
+        composes with the quantized payload identically to the oracle."""
+        ks = jax.random.split(jax.random.PRNGKey(12), 4)
+        e_q = jax.random.normal(ks[0], (2, 32))
+        p = quant.quantize_ranc(jax.random.normal(ks[1], (32, 900)), tile=128)
+        mask = jax.random.bernoulli(ks[2], 0.2, (2, 900))
+        g = jax.random.gumbel(ks[3], (2, 900), dtype=jnp.float32)
+        v1, i1 = approx_topk_op(e_q, p, None, 12, tile=128, interpret=True,
+                                noise=g, mask=mask, n_valid=800, impl=impl)
+        v2, i2 = approx_topk_reference(
+            e_q, p, jnp.full((2, 1), -1, jnp.int32), 12,
+            noise=g, mask=mask, n_valid=800,
+        )
+        assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-5, rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        assert (np.asarray(i1) < 800).all()
 
     def test_descending_and_unique(self):
         ks = jax.random.split(jax.random.PRNGKey(1), 3)
