@@ -3,16 +3,20 @@
 - ``cur``       CUR decomposition, pseudo-inverse (full + incremental)
 - ``sampling``  anchor sampling strategies (TopK/SoftMax/Random + oracles)
 - ``adacur``    Algorithm 1 reference implementation (growing shapes)
-- ``engine``    static-shape round engine + unified Retriever API (hot path)
-- ``anncur``    deprecated ANNCUR shims (view over AnchorIndex + engine)
+- ``engine``    static-shape round engine + unified Retriever API (hot path),
+                single-device and SPMD ((data x items) mesh via shard_map)
 - ``retrieval`` budget-matched retrieve-and-rerank + recall metrics
 - ``index``     the AnchorIndex offline artifact (build/save/load/shard/mutate)
 - ``scorer``    the Scorer subsystem (synthetic/tabulated/real CE + cache)
+
+ANNCUR lives inside this API: the offline product is
+``AnchorIndex.with_latents`` and the online search is
+``ANNCURRetriever.from_index`` (the legacy ``anncur`` shim module was
+removed after its deprecation cycle).
 """
 
-from . import adacur, anncur, cur, engine, index, retrieval, sampling, scorer  # noqa: F401
+from . import adacur, cur, engine, index, retrieval, sampling, scorer  # noqa: F401
 from .adacur import AdaCURResult, adacur_search, make_jitted_search  # noqa: F401
-from .anncur import ANNCURIndex, build_index  # noqa: F401
 from .engine import (  # noqa: F401
     AdaCURRetriever,
     ANNCURRetriever,
@@ -21,6 +25,7 @@ from .engine import (  # noqa: F401
     ce_call_plan,
     engine_search,
     make_engine,
+    make_sharded_engine,
 )
 from .index import AnchorIndex, build_r_anc  # noqa: F401
 from .scorer import (  # noqa: F401

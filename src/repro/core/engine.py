@@ -28,22 +28,37 @@ path:
   :class:`ANNCURRetriever` (fixed anchors = one engine round, arXiv
   2210.12579) and :class:`RerankRetriever` (retrieve-and-rerank = one
   retriever-seeded round with no budget split) are thin configurations of
-  :func:`engine_search` behind the common :class:`Retriever` protocol.
+  :func:`engine_search` behind the common :class:`Retriever` protocol;
+- **one SPMD program over a (data x items) mesh**: the whole engine — slab
+  state, sampling, CE scoring, incremental pinv, rerank — is written as a
+  *per-shard math core* in local item coordinates plus a thin *collective
+  layer* (:class:`ShardCtx` + the ``_merge_topk``/``_gather_cols``/
+  ``_score_once`` helpers below).  :func:`make_sharded_engine` runs that
+  core under ``shard_map``: the item axis shards the payload and the
+  per-shard slab columns, the data axis shards the query batch, and the
+  small pinv/e_q state replicates.  A single-device search is the same core
+  on a trivial one-shard context, so the sharded engine is **bit-identical**
+  to the single-device engine by construction (see the collective layer's
+  docstrings for the three contracts that make this true).
 """
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Callable, NamedTuple, Optional, Protocol, runtime_checkable
+from typing import Any, Callable, NamedTuple, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
 from ..configs.base import AdaCURConfig, replace
 from ..kernels.approx_topk import quant
 from ..kernels.approx_topk.ops import approx_topk_op
+from ..kernels.approx_topk.quant import QuantizedRanc
 from . import cur, sampling
 from .adacur import AdaCURResult, ScoreFn
 
@@ -69,7 +84,11 @@ def ce_call_plan(cfg: AdaCURConfig, rounds: Optional[int] = None) -> int:
 
 
 class EngineState(NamedTuple):
-    """Loop-invariant-shaped state threaded through the round body."""
+    """Loop-invariant-shaped state threaded through the round body.
+
+    Under the SPMD engine, ``selected`` is the only item-axis buffer — it is
+    *local* (B_local, N_local); everything else is small, indexed by global
+    item ids, and replicated across item shards."""
 
     anchor_idx: jax.Array    # (B, k_i) int32, -1 in unfilled slots
     c_test: jax.Array        # (B, k_i) exact CE scores, 0 in unfilled slots
@@ -77,6 +96,177 @@ class EngineState(NamedTuple):
     p: jax.Array             # (B, k_i, k_q) incremental pinv, 0 beyond filled
     e_q: jax.Array           # (B, k_q) latent query embedding
     selected: jax.Array      # (B, N) bool mask of already-selected items
+
+
+# ---------------------------------------------------------------------------
+# The collective layer: ShardCtx + the cross-shard primitives.
+#
+# The engine's math core runs in LOCAL item coordinates — every per-item
+# buffer it touches is this shard's slab.  The helpers below are the only
+# places shard boundaries exist.  Three contracts make the sharded program
+# bit-identical to the single-device one:
+#
+# 1. **per-column scores are shard-invariant**: every sampling score is an
+#    independent fp32 contraction over one payload column (+ the blocked
+#    noise field, a pure function of global (row, item) coordinates — see
+#    ``sampling.blocked_gumbel``), so a column scores to the same bits no
+#    matter which shard computes it;
+# 2. **deterministic global-id tie-break**: per-shard candidate lists break
+#    exact score ties by ascending item id (the fused kernel contract), and
+#    the cross-shard merge concatenates shard blocks in ascending shard
+#    order before an index-stable ``lax.top_k`` — equal values therefore
+#    resolve to the ascending *global* id, exactly like a single shard;
+# 3. **every contribution has one owner**: anchor-column gathers and CE
+#    scores are computed by exactly one shard and ``psum``-broadcast; the
+#    other shards contribute exact zeros, and ``x + 0.0`` is exact in fp.
+# ---------------------------------------------------------------------------
+
+
+class ShardCtx(NamedTuple):
+    """This program instance's place on the (data x items) mesh.
+
+    ``item_axes is None`` is the trivial single-shard context: every
+    collective helper short-circuits to plain local math, which *is* the
+    single-device engine."""
+
+    item_axes: Optional[Tuple[str, ...]]  # mesh axes sharding the item axis
+    data_axes: Tuple[str, ...]            # mesh axes sharding the query batch
+    n_local: int                          # item columns owned by this shard
+    n_item_shards: int
+    item_shard: Any                       # () int32 shard index (0 unsharded)
+    row_offset: Any                       # global row of local batch row 0
+
+
+def _local_ctx(n_items: int) -> ShardCtx:
+    return ShardCtx(None, (), n_items, 1, 0, 0)
+
+
+def _axes_index(axes: Tuple[str, ...]) -> jax.Array:
+    """Mixed-radix shard index over ``axes`` (major-to-minor in given order,
+    matching ``lax.all_gather``'s tiled concatenation order)."""
+    i = jnp.int32(0)
+    for a in axes:
+        i = i * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return i
+
+
+def _item_offset(ctx: ShardCtx):
+    """Global position of this shard's column 0."""
+    return ctx.item_shard * ctx.n_local
+
+
+def _psum_items(ctx: ShardCtx, x: jax.Array) -> jax.Array:
+    return jax.lax.psum(x, ctx.item_axes) if ctx.item_axes else x
+
+
+def _merge_topk(ctx: ShardCtx, vals: jax.Array, gidx: jax.Array, k: int):
+    """Per-shard (B, k) candidates -> global (B, k) top-k, replicated.
+
+    The documented tie-break contract for cross-shard merges: each shard's
+    list is value-sorted with exact ties in ascending global id (the fused
+    kernel / ``lax.top_k`` index-stability), shard blocks concatenate in
+    ascending shard order (= ascending global id ranges), and the final
+    ``lax.top_k`` is index-stable over that buffer — so exact score ties
+    resolve to the ascending global item id, identically to one shard
+    ranking all N columns."""
+    if ctx.item_axes is None:
+        return vals, gidx
+    vg = jax.lax.all_gather(vals, ctx.item_axes, axis=1, tiled=True)
+    ig = jax.lax.all_gather(gidx, ctx.item_axes, axis=1, tiled=True)
+    v, pos = jax.lax.top_k(vg, k)
+    return v, jnp.take_along_axis(ig, pos, axis=1)
+
+
+def _local_topk_merge(ctx: ShardCtx, logits: jax.Array, k: int) -> jax.Array:
+    """top-k of a local (B, N_local) score slab -> global ids."""
+    v, i = jax.lax.top_k(logits, k)
+    if ctx.item_axes is None:
+        return i
+    _, gi = _merge_topk(ctx, v, i.astype(jnp.int32) + _item_offset(ctx), k)
+    return gi
+
+
+def _sample_random_ctx(
+    ctx: ShardCtx, key: jax.Array, selected: jax.Array, k: int
+) -> jax.Array:
+    """Uniform w/o replacement over unselected items (global ids) — the
+    shard-decomposed twin of ``sampling.sample_random`` (same noise field,
+    same masked-Gumbel formula, so the single-shard case is bit-equal)."""
+    b, n_local = selected.shape
+    g = sampling.blocked_gumbel(key, b, n_local, ctx.row_offset, _item_offset(ctx))
+    logits = jnp.where(selected, sampling.NEG_INF, 0.0) + g
+    return _local_topk_merge(ctx, logits, k)
+
+
+def _mark_selected(ctx: ShardCtx, selected: jax.Array, gidx: jax.Array) -> jax.Array:
+    """Set the (global-id) picks in the local selected mask; ids owned by
+    other shards drop out of range (negative locals must be sent PAST the
+    slab, not left to Python-wrap onto someone else's column)."""
+    rows = jnp.arange(selected.shape[0])[:, None]
+    local = gidx - _item_offset(ctx)
+    n_local = selected.shape[1]
+    local = jnp.where((local >= 0) & (local < n_local), local, n_local)
+    return selected.at[rows, local].set(True, mode="drop")
+
+
+def _gather_cols(
+    ctx: ShardCtx, r_anc, gidx: jax.Array, via_onehot: bool = False
+) -> jax.Array:
+    """R_anc[:, gidx] -> (B, k_q, k) fp32: the global->shard column gather.
+
+    Each shard dequantizes/gathers exactly the columns it owns and the
+    results are psum-broadcast (one owner per column, exact zeros
+    elsewhere)."""
+    if ctx.item_axes is None:
+        return quant.gather_columns(r_anc, gidx, via_onehot=via_onehot)
+    local = gidx - _item_offset(ctx)
+    owned = (local >= 0) & (local < ctx.n_local)
+    cols = quant.gather_columns(
+        r_anc, jnp.clip(local, 0, ctx.n_local - 1), via_onehot=via_onehot
+    )
+    return _psum_items(ctx, jnp.where(owned[:, None, :], cols, 0.0))
+
+
+def _map_item_ids(ctx: ShardCtx, item_ids: jax.Array, gidx: jax.Array) -> jax.Array:
+    """Engine positions -> external corpus ids through the sharded id map."""
+    if ctx.item_axes is None:
+        return jnp.take(item_ids, gidx, axis=0)
+    local = gidx - _item_offset(ctx)
+    owned = (local >= 0) & (local < ctx.n_local)
+    v = jnp.take(item_ids, jnp.clip(local, 0, ctx.n_local - 1), axis=0)
+    return _psum_items(ctx, jnp.where(owned, v, 0))
+
+
+def _score_once(
+    ctx: ShardCtx, score_fn: ScoreFn, query, ids: jax.Array, dtype
+) -> jax.Array:
+    """Exact-CE score a (B, k) id batch EXACTLY ONCE across the system.
+
+    Item shard 0 of each data shard runs the scorer (host callbacks fire on
+    that shard only — ``lax.cond`` branches execute per shard at runtime,
+    so a counting scorer's measured calls stay equal to the plan); the
+    result psum-broadcasts to the item shards that contributed zeros."""
+    if ctx.item_axes is None:
+        return score_fn(query, ids)
+    c = jax.lax.cond(
+        ctx.item_shard == 0,
+        lambda q, i: score_fn(q, i).astype(dtype),
+        lambda q, i: jnp.zeros(i.shape, dtype),
+        query, ids,
+    )
+    return _psum_items(ctx, c)
+
+
+def _global_frac(ctx: ShardCtx, hit: jax.Array) -> jax.Array:
+    """Batch-mean of a boolean (B_local, m) statistic over the GLOBAL batch
+    (the early-exit monitor must stop every shard on the same round).
+    All partial sums are exact integers in fp32, so the sharded mean is
+    bit-equal to the single-device one."""
+    if not ctx.data_axes:
+        return hit.mean()
+    total = jax.lax.psum(jnp.sum(hit.astype(jnp.float32)), ctx.data_axes)
+    n_rows = jax.lax.psum(jnp.int32(1), ctx.data_axes) * hit.size
+    return total / n_rows.astype(jnp.float32)
 
 
 def _effective_tile(cfg: AdaCURConfig, r_anc) -> int:
@@ -126,76 +316,95 @@ def _sample_round(
     r_anc: jax.Array,
     k_eff: int,
     n_valid: Optional[int],
+    ctx: ShardCtx,
     force_mask: bool = False,
 ) -> jax.Array:
-    """One adaptive round's anchor pick (Alg. 3) — dense or fused.
+    """One adaptive round's anchor pick (Alg. 3) — dense or fused, over this
+    shard's payload slab; returns GLOBAL item ids.
 
     ``r_anc`` is any payload type (fp32/bf16 array or int8 QuantizedRanc);
     both branches dequantize per column, the dense one via
-    :func:`quant.matmul`, the fused one inside the kernel tiles."""
+    :func:`quant.matmul`, the fused one inside the kernel tiles.  On a
+    sharded context the per-shard candidates go through the tie-break
+    merge (:func:`_merge_topk`)."""
+    sharded = ctx.item_axes is not None
+    b, n_local = state.selected.shape
+    if cfg.strategy == "random" and (sharded or cfg.use_fused_topk):
+        return _sample_random_ctx(ctx, key, state.selected, k_eff)
     if not cfg.use_fused_topk:
         s_hat = quant.matmul(state.e_q, r_anc)
-        return sampling.sample(
-            cfg.strategy, key, s_hat, state.selected, k_eff, cfg.softmax_temp
-        )
-    if cfg.strategy == "random":
-        return sampling.sample_random(key, state.selected, k_eff)
-    suppress = _fused_suppress(cfg, state, force_mask)
+        if not sharded:
+            return sampling.sample(
+                cfg.strategy, key, s_hat, state.selected, k_eff, cfg.softmax_temp
+            )
+        logits = sampling._masked_logits(s_hat, state.selected, cfg.softmax_temp)
+        if cfg.strategy == "softmax":
+            logits = logits + sampling.blocked_gumbel(
+                key, b, n_local, ctx.row_offset, _item_offset(ctx)
+            )
+        return _local_topk_merge(ctx, logits, k_eff)
+    suppress = _fused_suppress(cfg, state, force_mask or sharded)
     if cfg.strategy == "softmax":
         # temp folds into e_q (scores/temp == (e_q/temp) @ R_anc); Gumbel
         # noise enters the kernel as an input, S_hat stays in VMEM.
-        b, n = state.selected.shape
-        g = jax.random.gumbel(key, (b, n), dtype=jnp.float32)
-        e_q = state.e_q / jnp.asarray(cfg.softmax_temp, state.e_q.dtype)
-        _, idx = approx_topk_op(
-            e_q, r_anc, k=k_eff, tile=_effective_tile(cfg, r_anc),
-            interpret=cfg.fused_interpret, noise=g, n_valid=n_valid,
-            **suppress,
+        g = sampling.blocked_gumbel(
+            key, b, n_local, ctx.row_offset, _item_offset(ctx)
         )
+        e_q = state.e_q / jnp.asarray(cfg.softmax_temp, state.e_q.dtype)
+        v, idx = approx_topk_op(
+            e_q, r_anc, k=k_eff, tile=_effective_tile(cfg, r_anc),
+            interpret=cfg.fused_interpret, noise=g,
+            n_valid=None if sharded else n_valid, **suppress,
+        )
+    else:
+        # topk: temp > 0 is order-preserving, no noise needed
+        v, idx = approx_topk_op(
+            state.e_q, r_anc, k=k_eff, tile=_effective_tile(cfg, r_anc),
+            interpret=cfg.fused_interpret,
+            n_valid=None if sharded else n_valid, **suppress,
+        )
+    if not sharded:
         return idx
-    # topk: temp > 0 is order-preserving, no noise needed
-    _, idx = approx_topk_op(
-        state.e_q, r_anc, k=k_eff, tile=_effective_tile(cfg, r_anc),
-        interpret=cfg.fused_interpret, n_valid=n_valid, **suppress,
-    )
-    return idx
+    _, gidx = _merge_topk(ctx, v, idx + _item_offset(ctx), k_eff)
+    return gidx
 
 
 def _make_round_body(
-    score_fn: ScoreFn,
+    scored: ScoreFn,
     r_anc: jax.Array,
     query,
     cfg: AdaCURConfig,
     keys: jax.Array,
     k_s: int,
     n_valid: Optional[int],
+    ctx: ShardCtx,
     force_mask: bool = False,
 ) -> Callable[[jax.Array, EngineState], EngineState]:
     """The shape-invariant adaptive round body (rounds 1..n_rounds-1).
 
-    ``r`` may be a python int (unrolled) or a traced int32 (fori/while)."""
+    ``r`` may be a python int (unrolled) or a traced int32 (fori/while).
+    ``scored`` is the engine's score-once wrapper (id-mapped, one CE call
+    per pair system-wide); all item ids in play are global."""
     n_rand = int(round(cfg.round_epsilon * k_s))
 
     def body(r, state: EngineState) -> EngineState:
         key_r = keys[r]
-        b = state.selected.shape[0]
-        row_ids = jnp.arange(b)[:, None]
         idx_new = _sample_round(
-            cfg, key_r, state, r_anc, k_s - n_rand, n_valid, force_mask
+            cfg, key_r, state, r_anc, k_s - n_rand, n_valid, ctx, force_mask
         )
         if n_rand:
             # ε-greedy diversity mix (beyond-paper; see AdaCURConfig)
-            sel_tmp = state.selected.at[row_ids, idx_new].set(True)
+            sel_tmp = _mark_selected(ctx, state.selected, idx_new)
             k_eps = jax.random.fold_in(key_r, 1)
-            idx_rand = sampling.sample_random(k_eps, sel_tmp, n_rand)
+            idx_rand = _sample_random_ctx(ctx, k_eps, sel_tmp, n_rand)
             idx_new = jnp.concatenate([idx_new, idx_rand], axis=1)
-        selected = state.selected.at[row_ids, idx_new].set(True)
+        selected = _mark_selected(ctx, state.selected, idx_new)
         start = r * k_s
 
         # exact CE scores for the new slab (Alg. 1 line 15)
-        c_new = score_fn(query, idx_new)                       # (B, k_s)
-        cols_new = quant.gather_columns(
-            r_anc, idx_new, via_onehot=cfg.distributed_gather
+        c_new = scored(query, idx_new)                         # (B, k_s)
+        cols_new = _gather_cols(
+            ctx, r_anc, idx_new, via_onehot=cfg.distributed_gather
         )                                                      # (B, k_q, k_s)
 
         anchor_idx = jax.lax.dynamic_update_slice(
@@ -222,28 +431,36 @@ def _make_round_body(
     return body
 
 
-def _provisional_topk(cfg: AdaCURConfig, e_q, r_anc, m: int, n_valid, invalid=None):
+def _provisional_topk(
+    cfg: AdaCURConfig, e_q, r_anc, m: int, n_valid, invalid=None,
+    ctx: Optional[ShardCtx] = None,
+):
     """Top-m candidate ids of S_hat (unmasked) — the early-exit monitor.
 
-    ``invalid`` is the (N,) runtime invalid-column mask of a dynamic corpus
-    (padded capacity); it replaces the static ``n_valid`` bound."""
+    ``invalid`` is the (N_local,) runtime invalid-column mask of a dynamic
+    corpus (padded capacity); it replaces the static ``n_valid`` bound.
+    Returns global ids (merged on a sharded context)."""
+    ctx = ctx or _local_ctx(r_anc.shape[1])
+    sharded = ctx.item_axes is not None
     if cfg.use_fused_topk:
         mask = (
             None if invalid is None
             else jnp.broadcast_to(invalid[None, :], (e_q.shape[0], r_anc.shape[1]))
         )
-        _, idx = approx_topk_op(
+        v, idx = approx_topk_op(
             e_q, r_anc, None, m, tile=_effective_tile(cfg, r_anc),
-            interpret=cfg.fused_interpret, n_valid=n_valid, mask=mask,
+            interpret=cfg.fused_interpret,
+            n_valid=None if sharded else n_valid, mask=mask,
         )
-        return idx
+        if not sharded:
+            return idx
+        return _merge_topk(ctx, v, idx + _item_offset(ctx), m)[1]
     s_hat = quant.matmul(e_q, r_anc)
-    if n_valid is not None and n_valid < s_hat.shape[1]:
+    if n_valid is not None and not sharded and n_valid < s_hat.shape[1]:
         s_hat = jnp.where(jnp.arange(s_hat.shape[1]) < n_valid, s_hat, sampling.NEG_INF)
     if invalid is not None:
         s_hat = jnp.where(invalid[None, :], sampling.NEG_INF, s_hat)
-    _, idx = jax.lax.top_k(s_hat, m)
-    return idx
+    return _local_topk_merge(ctx, s_hat, m)
 
 
 def _pad_short_ranking(top_idx: jax.Array, top_s: jax.Array):
@@ -273,6 +490,7 @@ def engine_search(
     n_rounds=None,
     return_scores: Optional[bool] = None,
     item_ids: Optional[jax.Array] = None,
+    _ctx: Optional[ShardCtx] = None,
 ) -> AdaCURResult:
     """Run Algorithm 1 (+ retrieval) through the static-shape round engine.
 
@@ -301,19 +519,44 @@ def engine_search(
     ``cfg.payload_dtype`` converts a plain array up to the configured
     payload inside the trace (an AnchorIndex-backed retriever pre-quantizes
     instead — see ``Retriever.from_index``).
+
+    ``_ctx`` is the shard context when this call is the per-shard body of
+    the SPMD engine (:func:`make_sharded_engine`); ``r_anc``/``item_ids``
+    are then this shard's LOCAL slabs and ``query`` the local batch rows,
+    while ``n_valid_items`` stays the GLOBAL valid count.
     """
     r_anc = quant.as_payload(r_anc, cfg.payload_dtype, cfg.payload_tile)
     k_q, n_items = r_anc.shape
+    ctx = _ctx or _local_ctx(n_items)
+    sharded = ctx.item_axes is not None
+    n_global = n_items * ctx.n_item_shards
     k_i = cfg.budget_ce if not cfg.split_budget else cfg.k_anchor
     r_max = cfg.n_rounds
     if k_i % r_max != 0:
         raise ValueError(f"k_i={k_i} not divisible by n_rounds={r_max}")
     k_s = k_i // r_max
     if return_scores is None:
-        return_scores = not cfg.use_fused_topk
+        return_scores = not cfg.use_fused_topk and not sharded
+    if sharded and return_scores:
+        raise ValueError(
+            "return_scores is unavailable under the sharded engine: the "
+            "(B, N) approximate score matrix is exactly what sharding "
+            "refuses to materialize"
+        )
     n_valid = None
-    invalid = None                        # (N,) runtime invalid-column mask
-    if n_valid_items is not None:
+    invalid = None                        # (N_local,) runtime invalid mask
+    if sharded:
+        # the sharded engine is always on the dynamic-mask path: validity is
+        # a local column mask derived from the (replicated) global bound
+        nv = jnp.minimum(
+            jnp.asarray(
+                n_global if n_valid_items is None else n_valid_items, jnp.int32
+            ),
+            n_global,
+        )
+        local_pos = _item_offset(ctx) + jnp.arange(n_items, dtype=jnp.int32)
+        invalid = local_pos >= nv
+    elif n_valid_items is not None:
         if isinstance(n_valid_items, (int, np.integer)):
             if n_valid_items < n_items:
                 n_valid = int(n_valid_items)
@@ -323,11 +566,6 @@ def engine_search(
     dyn_valid = invalid is not None
     if cfg.loop_mode == "unrolled" and n_rounds is not None:
         raise ValueError("runtime n_rounds override requires loop_mode='fori'")
-    if item_ids is not None:
-        _raw_score_fn = score_fn
-
-        def score_fn(q, idx, _f=_raw_score_fn, _ids=item_ids):
-            return _f(q, jnp.take(_ids, idx, axis=0))
 
     if first_anchors is not None:
         b = first_anchors.shape[0]
@@ -340,7 +578,23 @@ def engine_search(
     else:
         b = jax.tree_util.tree_leaves(query)[0].shape[0]
 
-    rows = jnp.arange(b)[:, None]
+    # the score-once wrapper: positions -> external ids -> exactly one CE
+    # call per pair system-wide (item shard 0 scores, psum broadcasts)
+    if sharded:
+        score_dtype = jax.eval_shape(
+            lambda q, i: score_fn(q, i),
+            query, jax.ShapeDtypeStruct((b, k_s), jnp.int32),
+        ).dtype
+
+        def scored(q, gidx):
+            ids = gidx if item_ids is None else _map_item_ids(ctx, item_ids, gidx)
+            return _score_once(ctx, score_fn, q, ids, score_dtype)
+    elif item_ids is not None:
+        def scored(q, gidx, _f=score_fn, _ids=item_ids):
+            return _f(q, jnp.take(_ids, gidx, axis=0))
+    else:
+        scored = score_fn
+
     selected = jnp.zeros((b, n_items), dtype=bool)
     if n_valid is not None:
         selected = selected | (jnp.arange(n_items) >= n_valid)
@@ -354,12 +608,10 @@ def engine_search(
     if first_anchors is not None and cfg.first_round == "retriever":
         idx0 = first_anchors
     else:
-        idx0 = sampling.sample_random(keys[0], selected, k_s)
-    selected = selected.at[rows, idx0].set(True)
-    c0 = score_fn(query, idx0)                                 # (B, k_s)
-    cols0 = quant.gather_columns(
-        r_anc, idx0, via_onehot=cfg.distributed_gather
-    )
+        idx0 = _sample_random_ctx(ctx, keys[0], selected, k_s)
+    selected = _mark_selected(ctx, selected, idx0)
+    c0 = scored(query, idx0)                                   # (B, k_s)
+    cols0 = _gather_cols(ctx, r_anc, idx0, via_onehot=cfg.distributed_gather)
 
     dtype = c0.dtype
     anchor_idx = jnp.full((b, k_i), -1, jnp.int32)
@@ -385,7 +637,7 @@ def engine_search(
     state = EngineState(anchor_idx, c_test, a_buf, p, e_q, selected)
 
     body = _make_round_body(
-        score_fn, r_anc, query, cfg, keys, k_s, n_valid, force_mask=dyn_valid
+        scored, r_anc, query, cfg, keys, k_s, n_valid, ctx, force_mask=dyn_valid
     )
 
     # --- rounds 1..n_rounds-1 ----------------------------------------------
@@ -397,8 +649,8 @@ def engine_search(
         r_dyn = jnp.asarray(r_max if n_rounds is None else n_rounds, jnp.int32)
         r_dyn = jnp.clip(r_dyn, 1, r_max)
         if cfg.early_exit_tol > 0.0:
-            m = min(cfg.k_retrieve, n_items)
-            prev = _provisional_topk(cfg, state.e_q, r_anc, m, n_valid, invalid)
+            m = min(cfg.k_retrieve, n_global)
+            prev = _provisional_topk(cfg, state.e_q, r_anc, m, n_valid, invalid, ctx)
 
             def cond(carry):
                 r, frac, _, _ = carry
@@ -407,9 +659,11 @@ def engine_search(
             def while_body(carry):
                 r, _, st, prev_top = carry
                 st = body(r, st)
-                cur_top = _provisional_topk(cfg, st.e_q, r_anc, m, n_valid, invalid)
+                cur_top = _provisional_topk(
+                    cfg, st.e_q, r_anc, m, n_valid, invalid, ctx
+                )
                 hit = (cur_top[:, :, None] == prev_top[:, None, :]).any(-1)
-                return r + 1, hit.mean(), st, cur_top
+                return r + 1, _global_frac(ctx, hit), st, cur_top
 
             rounds_done, _, state, _ = jax.lax.while_loop(
                 cond, while_body, (jnp.int32(1), jnp.float32(0.0), state, prev)
@@ -440,16 +694,21 @@ def engine_search(
     # the top approximate-scoring non-anchor items.
     k_r = cfg.budget_ce - k_i
     if cfg.use_fused_topk:
-        _, rerank_idx = approx_topk_op(
+        v_r, rerank_idx = approx_topk_op(
             state.e_q, r_anc, k=k_r, tile=_effective_tile(cfg, r_anc),
-            interpret=cfg.fused_interpret, n_valid=n_valid,
-            **_fused_suppress(cfg, state, dyn_valid),
+            interpret=cfg.fused_interpret,
+            n_valid=None if sharded else n_valid,
+            **_fused_suppress(cfg, state, dyn_valid or sharded),
         )
+        if sharded:
+            _, rerank_idx = _merge_topk(
+                ctx, v_r, rerank_idx + _item_offset(ctx), k_r
+            )
     else:
         full = s_hat if s_hat is not None else quant.matmul(state.e_q, r_anc)
         masked = jnp.where(state.selected, sampling.NEG_INF, full)
-        _, rerank_idx = jax.lax.top_k(masked, k_r)             # (B, k_r)
-    rerank_scores = score_fn(query, rerank_idx)                # k_r CE calls
+        rerank_idx = _local_topk_merge(ctx, masked, k_r)       # (B, k_r)
+    rerank_scores = scored(query, rerank_idx)                  # k_r CE calls
     pool_idx = jnp.concatenate([anchor_idx, rerank_idx], axis=1)
     pool_scores = jnp.concatenate([anchor_logits, rerank_scores], axis=1)
     k = min(cfg.k_retrieve, pool_idx.shape[1])
@@ -512,6 +771,215 @@ def make_engine(
     return run
 
 
+def _payload_specs(r_anc, item_axes: Tuple[str, ...]):
+    """shard_map in_spec tree for the payload operand: codes column-sharded,
+    per-tile scales co-sharded on the same axes."""
+    if isinstance(r_anc, QuantizedRanc):
+        return QuantizedRanc(
+            codes=P(None, item_axes), scales=P(item_axes), tile=r_anc.tile
+        )
+    return P(None, item_axes)
+
+
+def make_sharded_engine(
+    score_fn: ScoreFn,
+    cfg: AdaCURConfig,
+    mesh: Mesh,
+    *,
+    item_axes: Tuple[str, ...] = ("items",),
+    data_axes: Optional[Tuple[str, ...]] = None,
+    n_valid_items=None,
+    jit_compile: bool = True,
+):
+    """The SPMD engine: one ``shard_map`` program over a (data x items) mesh.
+
+    The returned callable has :func:`make_engine`'s signature.  Inside, the
+    whole multi-round search — estimate, fused score->sample, CE scoring,
+    incremental pinv / e_q update, provisional top-k, rerank — is the
+    per-shard math core of :func:`engine_search` on a live :class:`ShardCtx`:
+
+    - ``item_axes`` shard the payload (fp32 columns, or int8 codes with
+      their co-sharded per-tile scales), the per-shard ``selected`` slab and
+      the ``item_ids`` map; per-round candidates cross shards only as
+      (B, k) lists through the documented tie-break merge;
+    - ``data_axes`` (default: every mesh axis not in ``item_axes`` named
+      ``pod``/``data``) shard the query batch; the blocked noise field keys
+      off global row ids, so the data split never changes a trajectory;
+    - the pinv/e_q state replicates — it is O(B·k_i·k_q), mesh-independent.
+
+    Results are **bit-identical** to the single-device engine for every
+    loop mode and payload dtype (the collective-layer contracts; asserted
+    by ``tests/test_multidevice.py``).  ``n_rounds``, ``n_valid`` and the
+    index's ``item_ids`` are traced operands of the one compiled program:
+    runtime round counts and corpus mutation never retrace.
+
+    Constraints checked here: the global batch divides over ``data_axes``;
+    the capacity divides over ``item_axes`` into ``NOISE_BLOCK``-aligned
+    slabs holding whole payload tiles (``AnchorIndex.shard`` guarantees
+    this); and every per-shard candidate list (``k_s``, the rerank budget,
+    ``k_retrieve``) fits in one shard's slab.
+
+    Scorer constraint: host-callback scorers are supported (the callback
+    fires on item shard 0 only), but the callback must stay NUMPY-ONLY —
+    ``TabulatedScorer`` and ``CachingScorer`` over it are safe.  A callback
+    that launches a nested device computation (``CrossEncoderScorer``'s
+    jitted transformer forward) deadlocks a single-process multi-device
+    runtime: the nested launch contends with the other shards parked at
+    the score-broadcast psum rendezvous.  Serve a real CE behind a host
+    boundary (its own process/devices) instead.
+    """
+    if not jit_compile:
+        raise ValueError("the sharded engine is a compiled SPMD program; "
+                         "jit_compile=False is only available unsharded")
+    item_axes = (item_axes,) if isinstance(item_axes, str) else tuple(item_axes)
+    if data_axes is None:
+        data_axes = tuple(
+            a for a in mesh.axis_names
+            if a not in item_axes and a in ("pod", "data")
+        )
+    data_axes = tuple(data_axes)
+    n_item_shards = math.prod(mesh.shape[a] for a in item_axes)
+    n_data_shards = math.prod(mesh.shape[a] for a in data_axes) if data_axes else 1
+    k_i = cfg.budget_ce if not cfg.split_budget else cfg.k_anchor
+    k_s = k_i // cfg.n_rounds
+    k_r = cfg.budget_ce - k_i if cfg.split_budget else 0
+
+    data_spec = P(data_axes) if data_axes else P()
+
+    def _validate(r_anc, b_global):
+        capacity = r_anc.shape[1]
+        if capacity % n_item_shards:
+            raise ValueError(
+                f"capacity {capacity} not divisible over {n_item_shards} item "
+                f"shards (AnchorIndex.shard aligns this)"
+            )
+        n_local = capacity // n_item_shards
+        if n_item_shards > 1 and n_local % sampling.NOISE_BLOCK:
+            raise ValueError(
+                f"per-shard slab {n_local} must hold whole NOISE_BLOCK="
+                f"{sampling.NOISE_BLOCK} noise blocks"
+            )
+        if isinstance(r_anc, QuantizedRanc) and n_local % r_anc.tile:
+            raise ValueError(
+                f"per-shard slab {n_local} must hold whole payload tiles "
+                f"({r_anc.tile})"
+            )
+        need = max(k_s, k_r, min(cfg.k_retrieve, capacity))
+        if need > n_local:
+            raise ValueError(
+                f"per-shard candidate list ({need}) exceeds the per-shard "
+                f"slab ({n_local}); use fewer item shards"
+            )
+        if b_global % n_data_shards:
+            raise ValueError(
+                f"batch {b_global} not divisible over {n_data_shards} data shards"
+            )
+        return n_local
+
+    def core(r_anc, query, key, n_rounds, n_valid, item_ids, first_anchors):
+        n_local = r_anc.shape[1]
+        b_local = jax.tree_util.tree_leaves(query)[0].shape[0]
+        ctx = ShardCtx(
+            item_axes=item_axes,
+            data_axes=data_axes,
+            n_local=n_local,
+            n_item_shards=n_item_shards,
+            item_shard=_axes_index(item_axes),
+            row_offset=_axes_index(data_axes) * b_local if data_axes else 0,
+        )
+        res = engine_search(
+            score_fn, r_anc, query, cfg, key,
+            first_anchors=first_anchors,
+            n_valid_items=n_valid, n_rounds=n_rounds,
+            return_scores=False, item_ids=item_ids, _ctx=ctx,
+        )
+        return (res.anchor_idx, res.anchor_scores, res.topk_idx,
+                res.topk_scores, res.rounds_done)
+
+    compiled = {}          # (has_first, query treedef/ranks) -> jitted fn
+
+    def run(r_anc, query, key, first_anchors=None, batch=None, n_rounds=None,
+            n_valid=None, item_ids=None):
+        if cfg.loop_mode == "fori":
+            n_rounds = jnp.asarray(
+                cfg.n_rounds if n_rounds is None else n_rounds, jnp.int32
+            )
+        elif n_rounds is not None:
+            raise ValueError("runtime n_rounds override requires loop_mode='fori'")
+        if batch is not None:
+            raise ValueError(
+                "the sharded engine derives the batch from the query leaves "
+                "(or first_anchors); the batch= override would leave the "
+                "query un-shardable over the data axes — pass batched "
+                "query operands instead"
+            )
+        r_anc = quant.as_payload(r_anc, cfg.payload_dtype, cfg.payload_tile)
+        b = (
+            first_anchors.shape[0] if first_anchors is not None
+            else jax.tree_util.tree_leaves(query)[0].shape[0]
+        )
+        _validate(r_anc, b)
+        capacity = r_anc.shape[1]
+        if n_valid is None:
+            n_valid = capacity if n_valid_items is None else n_valid_items
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        if item_ids is None:
+            item_ids = jnp.arange(capacity, dtype=jnp.int32)
+        query_specs = jax.tree.map(
+            lambda leaf: P(data_axes, *([None] * (jnp.ndim(leaf) - 1)))
+            if data_axes else P(),
+            query,
+        )
+        sig = (
+            first_anchors is not None,
+            jax.tree_util.tree_structure(query),
+            tuple(jnp.ndim(l) for l in jax.tree_util.tree_leaves(query)),
+            quant.payload_dtype_of(r_anc),
+        )
+        if sig not in compiled:
+            in_specs = (
+                _payload_specs(r_anc, item_axes),     # r_anc
+                query_specs,                          # query
+                P(),                                  # key
+                P() if cfg.loop_mode == "fori" else None,  # n_rounds
+                P(),                                  # n_valid
+                P(item_axes),                         # item_ids
+                data_spec if first_anchors is not None else None,
+            )
+            out_specs = (data_spec, data_spec, data_spec, data_spec, P())
+
+            live_specs = tuple(s for s in in_specs if s is not None)
+
+            def entry(r_anc, query, key, n_rounds, n_valid, item_ids,
+                      first_anchors):
+                args = (r_anc, query, key, n_rounds, n_valid, item_ids,
+                        first_anchors)
+                live = tuple(a for a, s in zip(args, in_specs) if s is not None)
+
+                def body(*live_args):
+                    it = iter(live_args)
+                    full = tuple(
+                        next(it) if s is not None else None for s in in_specs
+                    )
+                    return core(*full)
+
+                return shard_map(
+                    body, mesh=mesh, in_specs=live_specs,
+                    out_specs=out_specs, check_vma=False,
+                )(*live)
+
+            compiled[sig] = jax.jit(entry, static_argnums=())
+        anchor_idx, c_test, top_idx, top_s, rounds_done = compiled[sig](
+            r_anc, query, key, n_rounds, n_valid, item_ids, first_anchors
+        )
+        return AdaCURResult(
+            anchor_idx, c_test, None, top_idx, top_s,
+            ce_call_plan(cfg), rounds_done,
+        )
+
+    return run
+
+
 # ---------------------------------------------------------------------------
 # Unified Retriever API — ADACUR / ANNCUR / retrieve-and-rerank as
 # configurations of the one engine code path.
@@ -544,7 +1012,34 @@ class _IndexBacked:
     (:meth:`_apply_payload_policy`): the engine then receives an already
     bf16/int8 payload operand and never re-converts per call.  An index that
     is already quantized is authoritative and passes through unchanged.
+
+    An index whose item axis is placed over a mesh (``AnchorIndex.shard`` /
+    ``load(path, mesh)``) makes the retriever bind the **SPMD engine**
+    (:func:`make_sharded_engine`) instead: the full multi-round search runs
+    as one ``shard_map`` program with the payload item-sharded and the query
+    batch sharded over the mesh's ``data``/``pod`` axes, bit-identical to
+    the single-device engine.
     """
+
+    def _build_engine(self, cfg: AdaCURConfig, n_valid_items=None,
+                      return_scores: Optional[bool] = None,
+                      jit_compile: bool = True) -> Callable:
+        """make_engine or make_sharded_engine, by the index's placement."""
+        idx = getattr(self, "index", None)
+        mesh = axes = None
+        if idx is not None:
+            mesh, axes = idx._item_sharding()
+        if mesh is None:
+            self._sharded = False
+            return make_engine(
+                self.score_fn, cfg, n_valid_items,
+                return_scores=return_scores, jit_compile=jit_compile,
+            )
+        self._sharded = True
+        return make_sharded_engine(
+            self.score_fn, cfg, mesh, item_axes=axes,
+            n_valid_items=n_valid_items, jit_compile=jit_compile,
+        )
 
     def _apply_payload_policy(self, cfg: AdaCURConfig) -> None:
         idx = getattr(self, "index", None)
@@ -555,7 +1050,13 @@ class _IndexBacked:
             # authoritative (mirrors quant.as_payload: the policy converts
             # payloads UP, it never dequantizes an int8 artifact)
             return
-        self.index = idx.quantize(cfg.payload_dtype, tile=cfg.payload_tile)
+        mesh, _ = idx._item_sharding()
+        new = idx.quantize(cfg.payload_dtype, tile=cfg.payload_tile)
+        if mesh is not None:
+            # re-place the converted payload: quantization is a reshaping
+            # computation whose output placement XLA chooses freely
+            new = new.shard(mesh)
+        self.index = new
 
     def _search_operands(self):
         if self.index is None:
@@ -588,8 +1089,8 @@ class AdaCURRetriever(_IndexBacked):
         if self.r_anc is None and self.index is None:
             raise ValueError("need r_anc or an AnchorIndex")
         self._apply_payload_policy(self.cfg)
-        self._run = make_engine(
-            self.score_fn, self.cfg, self.n_valid_items, jit_compile=self.jit
+        self._run = self._build_engine(
+            self.cfg, self.n_valid_items, jit_compile=self.jit
         )
 
     @classmethod
@@ -657,7 +1158,7 @@ class ANNCURRetriever(_IndexBacked):
             round_epsilon=0.0, early_exit_tol=0.0,
         )
         self._apply_payload_policy(self.cfg)
-        self._run = make_engine(self.score_fn, self.cfg, jit_compile=self.jit)
+        self._run = self._build_engine(self.cfg, jit_compile=self.jit)
 
     @classmethod
     def from_index(cls, index, score_fn: ScoreFn, budget_ce: int,
@@ -715,8 +1216,8 @@ class RerankRetriever(_IndexBacked):
         )
         self._apply_payload_policy(self.cfg)
         # pure rerank never reads S_hat: skip the pinv/e_q machinery
-        self._run = make_engine(
-            self.score_fn, self.cfg, return_scores=False, jit_compile=self.jit
+        self._run = self._build_engine(
+            self.cfg, return_scores=False, jit_compile=self.jit
         )
 
     @classmethod
@@ -789,7 +1290,9 @@ def round_body_bn_intermediates(
     k_s = k_i // cfg.n_rounds
     b = batch or jax.tree_util.tree_leaves(query)[0].shape[0]
     keys = jax.random.split(jax.random.PRNGKey(0), cfg.n_rounds + 1)
-    body = _make_round_body(score_fn, r_anc, query, cfg, keys, k_s, None)
+    body = _make_round_body(
+        score_fn, r_anc, query, cfg, keys, k_s, None, _local_ctx(n_items)
+    )
     dtype = jnp.float32
     state = EngineState(
         anchor_idx=jnp.zeros((b, k_i), jnp.int32),
@@ -804,22 +1307,29 @@ def round_body_bn_intermediates(
 
 
 def engine_slab_bytes(
-    cfg: AdaCURConfig, batch: int, n_items: int, k_q: int
+    cfg: AdaCURConfig, batch: int, n_items: int, k_q: int,
+    n_data_shards: int = 1, n_item_shards: int = 1,
 ) -> dict:
-    """Device bytes of the engine's preallocated per-search state slabs.
+    """Device bytes of the engine's preallocated per-search state slabs —
+    PER SHARD when a (data x items) decomposition is given.
 
     The engine's whole working set is these six buffers (plus the payload it
-    streams); reporting them next to the index payload in BENCH_engine.json
-    tracks the memory story alongside latency as N scales.
+    streams); reporting them next to the index payload in BENCH_engine.json /
+    BENCH_sharded.json tracks the memory story alongside latency as N and
+    the mesh scale.  Under the SPMD engine the batch dimension divides over
+    ``n_data_shards`` everywhere, and the item axis — which only the
+    ``selected`` mask carries — further divides over ``n_item_shards``; the
+    pinv/e_q state replicates across item shards by design.
     """
     k_i = cfg.budget_ce if not cfg.split_budget else cfg.k_anchor
+    b = batch // n_data_shards
     slabs = {
-        "anchor_idx": batch * k_i * 4,
-        "c_test": batch * k_i * 4,
-        "a_buf": batch * k_q * k_i * 4,
-        "p": batch * k_i * k_q * 4,
-        "e_q": batch * k_q * 4,
-        "selected_mask": batch * n_items * 1,
+        "anchor_idx": b * k_i * 4,
+        "c_test": b * k_i * 4,
+        "a_buf": b * k_q * k_i * 4,
+        "p": b * k_i * k_q * 4,
+        "e_q": b * k_q * 4,
+        "selected_mask": b * (n_items // n_item_shards) * 1,
     }
     slabs["total"] = sum(slabs.values())
     return slabs

@@ -32,6 +32,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import math
 import os
 from dataclasses import dataclass
 from functools import partial
@@ -597,23 +598,35 @@ class AnchorIndex:
         """Place the item axis over ``mesh`` (capacity is re-padded to a
         shardable multiple if needed).  The placement lives in the arrays'
         own ``NamedSharding`` — it survives mutation (`add_items` etc.) and
-        pytree ops — and :meth:`topk` reads it back to search under
-        ``shard_map``.  A quantized payload co-shards codes and scales: the
-        capacity aligns to ``mesh.size * tile`` so every shard owns whole
-        quantization tiles and their scales."""
+        pytree ops — and :meth:`topk` / the retrievers' SPMD engine read it
+        back to search under ``shard_map``.  A quantized payload co-shards
+        codes and scales, and capacity aligns to
+        ``n_item_shards * lcm(tile, NOISE_BLOCK)`` so every shard owns whole
+        quantization tiles (with their scales) AND whole blocks of the
+        engine's canonical noise field (the bit-parity requirement of
+        ``sampling.blocked_gumbel``)."""
+        from .sampling import NOISE_BLOCK
+
         idx = self
-        unit = mesh.size * (idx.r_anc.tile if idx._quantized else 1)
-        if idx.capacity % unit:
-            idx = idx.with_capacity(-(-idx.capacity // unit) * unit)
-        spec = sharding.spec_for(
-            mesh, ("anchor_q", "items"), (idx.k_q, idx.capacity), rules
+        grain = math.lcm(idx.r_anc.tile if idx._quantized else 1, NOISE_BLOCK)
+        # learn which mesh axes the rules give the item axis (probe with a
+        # capacity every axis divides), then align only to THOSE shards —
+        # on a (data x items) mesh the data axis must not inflate the pad
+        probe = sharding.spec_for(
+            mesh, ("anchor_q", "items"), (idx.k_q, mesh.size * grain), rules
         )
-        item_axes = spec[1] if len(spec) > 1 else None
+        item_axes = probe[1] if len(probe) > 1 else None
         if item_axes is None:
             raise ValueError(
-                f"capacity {idx.capacity} not shardable over mesh {dict(mesh.shape)}"
+                f"item axis not shardable over mesh {dict(mesh.shape)}"
             )
         axes = (item_axes,) if isinstance(item_axes, str) else tuple(item_axes)
+        n_item_shards = 1
+        for a in axes:
+            n_item_shards *= mesh.shape[a]
+        unit = n_item_shards * grain
+        if idx.capacity % unit:
+            idx = idx.with_capacity(-(-idx.capacity // unit) * unit)
 
         def put(x, s):
             return jax.device_put(x, NamedSharding(mesh, s))
@@ -727,3 +740,17 @@ class AnchorIndex:
             check_vma=False,
         )
         return fn(e_q, *payload_args, invalid)
+
+    def engine_search(self, score_fn, query, cfg, key=None, **kw):
+        """One-shot FULL multi-round search over this index — the engine
+        twin of :meth:`topk`.  On a sharded index (``shard(mesh)`` /
+        ``load(path, mesh)``) the whole round loop runs as one SPMD program
+        under ``shard_map`` (``engine.make_sharded_engine``), bit-identical
+        to the single-device engine; otherwise it is the plain compiled
+        engine.  For repeated queries hold a
+        ``Retriever.from_index``-built retriever instead — this constructs
+        one per call."""
+        from .engine import AdaCURRetriever
+
+        ret = AdaCURRetriever.from_index(self, score_fn, cfg)
+        return ret.search(query, key, **kw)

@@ -5,6 +5,23 @@ anchors is done with an explicit (B, N) boolean mask so the whole multi-round
 loop stays jit-compatible.  SoftMax sampling without replacement uses the
 Gumbel-top-k trick (Kool et al. 2019) — top-k over ``logits + Gumbel noise``
 is an exact sample without replacement from the softmax distribution.
+
+**The blocked noise field.**  Every random draw in the engine (uniform
+round-0 / Random-strategy sampling, SoftMax Gumbel perturbations, the
+ε-greedy fill) reads from one canonical pseudo-random field over (query row,
+item) coordinates, generated per ``NOISE_BLOCK``-item block:
+
+    noise[i, j] = gumbel(fold_in(fold_in(key, row_id[i]), j // NOISE_BLOCK))
+                      [j % NOISE_BLOCK]
+
+The field is a pure function of (key, global row id, global item id) —
+independent of the batch slab or item slab it is evaluated on.  That is what
+makes the SPMD engine (``core/engine.py``) bit-identical to the single-device
+engine: a shard of a (data x items) mesh evaluates exactly the noise
+rectangle it owns by passing its global row/column offsets, rather than
+drawing from a differently-shaped array.  Shard boundaries must therefore
+align to ``NOISE_BLOCK`` columns (``AnchorIndex.shard`` pads capacity
+accordingly).
 """
 
 from __future__ import annotations
@@ -13,6 +30,41 @@ import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+
+# item-axis block size of the canonical noise field; item shards must own a
+# whole number of blocks (see AnchorIndex.shard's capacity alignment)
+NOISE_BLOCK = 128
+
+
+def blocked_gumbel(
+    key: jax.Array,
+    rows: int,
+    n: int,
+    row_offset=0,
+    col_offset=0,
+) -> jax.Array:
+    """(rows, n) Gumbel noise — the canonical field's rectangle starting at
+    global coordinates (``row_offset``, ``col_offset``).
+
+    ``col_offset`` must be a multiple of ``NOISE_BLOCK`` (offsets are shard
+    origins, which the index aligns); ``row_offset``/``col_offset`` may be
+    traced int32 (the SPMD engine derives them from mesh axis indices).
+    """
+    nb = -(-n // NOISE_BLOCK)
+    row_ids = jnp.asarray(row_offset, jnp.int32) + jnp.arange(rows, dtype=jnp.int32)
+    blk_ids = (
+        jnp.asarray(col_offset, jnp.int32) // NOISE_BLOCK
+        + jnp.arange(nb, dtype=jnp.int32)
+    )
+    row_keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(row_ids)
+    g = jax.vmap(
+        lambda rk: jax.vmap(
+            lambda b: jax.random.gumbel(
+                jax.random.fold_in(rk, b), (NOISE_BLOCK,), dtype=jnp.float32
+            )
+        )(blk_ids)
+    )(row_keys)                                   # (rows, nb, NOISE_BLOCK)
+    return g.reshape(rows, nb * NOISE_BLOCK)[:, :n]
 
 
 def _masked_logits(scores: jax.Array, selected: jax.Array, temp: float) -> jax.Array:
@@ -31,11 +83,16 @@ def sample_topk(
 
 
 def sample_softmax(
-    key: jax.Array, scores: jax.Array, selected: jax.Array, k: int, temp: float = 1.0
+    key: jax.Array, scores: jax.Array, selected: jax.Array, k: int,
+    temp: float = 1.0,
 ) -> jax.Array:
-    """SoftMax strategy: sample k items w/o replacement ∝ softmax(scores)."""
+    """SoftMax strategy: sample k items w/o replacement ∝ softmax(scores).
+
+    The Gumbel perturbation is the canonical field's (0, 0) rectangle; a
+    sharded engine shard evaluates the same field at its own offsets via
+    :func:`blocked_gumbel` directly (see ``engine._sample_round``)."""
     logits = _masked_logits(scores, selected, temp)
-    g = jax.random.gumbel(key, logits.shape, dtype=logits.dtype)
+    g = blocked_gumbel(key, logits.shape[0], logits.shape[1]).astype(logits.dtype)
     _, idx = jax.lax.top_k(logits + g, k)
     return idx
 
@@ -45,7 +102,7 @@ def sample_random(
 ) -> jax.Array:
     """Random strategy: uniform w/o replacement over unselected items."""
     logits = jnp.where(selected, NEG_INF, 0.0)
-    g = jax.random.gumbel(key, logits.shape, dtype=logits.dtype)
+    g = blocked_gumbel(key, logits.shape[0], logits.shape[1]).astype(logits.dtype)
     _, idx = jax.lax.top_k(logits + g, k)
     return idx
 

@@ -42,9 +42,14 @@ DEFAULT_RULES: Dict[str, Sequence[Axes]] = {
     "unit": (None,),
     # recsys
     "table_rows": (("pod", "data", "model"), ("data", "model"), ("data",)),
-    # retrieval (AnchorIndex): the item axis spreads over the whole mesh,
-    # the small anchor-query axis replicates
-    "items": (("pod", "data", "model"), ("data", "model"), ("data",), ("model",)),
+    # retrieval (AnchorIndex): on a serving (data x items) mesh the item
+    # axis lives on the dedicated "items" axis (the data axis shards the
+    # query batch — see engine.make_sharded_engine); on training meshes it
+    # spreads over the whole mesh as before
+    "items": (
+        ("items",),
+        ("pod", "data", "model"), ("data", "model"), ("data",), ("model",),
+    ),
     "anchor_q": (None,),
     "mlp_in": ("data",),
     "mlp_out": ("model",),

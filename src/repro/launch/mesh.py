@@ -27,3 +27,11 @@ def make_mesh(shape, axes):
     """Elastic variant: any (shape, axes) — checkpoint restore re-shards
     between meshes built here (see repro.checkpoint)."""
     return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_serving_mesh(data: int, items: int):
+    """The retrieval-serving mesh: ``data`` shards the query batch (data-
+    parallel request rows), ``items`` shards the AnchorIndex payload and the
+    engine's per-shard item slabs (see ``repro.core.engine``'s SPMD engine).
+    ``data * items`` must equal the visible device count."""
+    return jax.make_mesh((data, items), ("data", "items"))

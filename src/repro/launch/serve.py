@@ -26,7 +26,16 @@ The production serving loop the paper's technique plugs into:
 CLI:  PYTHONPATH=src python -m repro.launch.serve --requests 64 \
           --retriever {adacur,anncur,rerank} [--index-path DIR] \
           [--scorer {synthetic,real-ce}] [--cache] \
-          [--payload-dtype {float32,bfloat16,int8}]
+          [--payload-dtype {float32,bfloat16,int8}] [--mesh DATAxITEMS]
+
+``--mesh 2x4`` serves over a (data x items) mesh: the index payload shards
+over 8 devices' "items" axis, request batches data-parallel over "data", and
+the FULL multi-round engine runs as one shard_map program (bit-identical to
+single-device serving).  The device count must match — on a CPU host export
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first.  ``--mesh``
+composes with the synthetic/tabulated/cached scorers but NOT with
+``--scorer real-ce`` (nested-jit host callback; see
+``engine.make_sharded_engine``).
 """
 
 from __future__ import annotations
@@ -301,11 +310,28 @@ def main() -> None:
                     help="storage/streaming dtype of the R_anc payload: int8 "
                          "stores per-tile codes+scales (~4x smaller index, "
                          "fused dequant in the kernel)")
+    ap.add_argument("--mesh", default=None, metavar="DATAxITEMS",
+                    help="serve over a (data x items) mesh, e.g. 2x4: the "
+                         "items axis shards the index payload, the data axis "
+                         "shards request batches; the full engine runs as one "
+                         "shard_map program (device count must match)")
     args = ap.parse_args()
 
     from ..data.synthetic import make_synthetic_ce
 
     if args.scorer == "real-ce":
+        if args.mesh:
+            # the CE scorer's host callback launches a NESTED jit (the
+            # transformer forward); under a single-process multi-device
+            # runtime that nested launch deadlocks against the other
+            # shards' psum rendezvous.  Numpy-only callbacks (tabulated /
+            # cached scorers) are safe — the real CE needs its own devices
+            # (a scoring service), which single-process --mesh cannot give.
+            raise SystemExit(
+                "--mesh is not supported with --scorer real-ce: the CE "
+                "scorer's nested-jit host callback deadlocks a single-"
+                "process multi-device runtime (see make_sharded_engine docs)"
+            )
         _serve_real_ce(args)
         return
 
@@ -345,6 +371,8 @@ def main() -> None:
         index = index.quantize(args.payload_dtype, tile=cfg.payload_tile)
         print(f"payload {args.payload_dtype}: {index.payload_nbytes / 1e6:.1f} MB "
               f"(fp32 would be {fp32_bytes / 1e6:.1f} MB)")
+    if args.mesh:
+        index = _shard_for_serving(index, args)
     from ..core.scorer import CachingScorer, SyntheticScorer, TabulatedScorer
 
     if args.cache:
@@ -366,6 +394,33 @@ def main() -> None:
         retriever=retriever, max_batch=args.batch, candidate_fn=candidate_fn
     )
     _drive(svc, args, cfg, brute_n=args.n_items)
+
+
+def _shard_for_serving(index: AnchorIndex, args) -> AnchorIndex:
+    """``--mesh DxI`` -> place the index over a (data x items) mesh; the
+    retriever then auto-binds the SPMD engine (engine.make_sharded_engine)."""
+    from .mesh import make_serving_mesh
+
+    try:
+        d, i = (int(x) for x in args.mesh.lower().split("x"))
+    except ValueError as e:
+        raise SystemExit(f"--mesh must be DATAxITEMS (e.g. 2x4): {e}")
+    n_dev = len(jax.devices())
+    if d * i != n_dev:
+        raise SystemExit(
+            f"--mesh {args.mesh} needs {d * i} devices but jax sees {n_dev}; "
+            "on CPU export XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{d * i}"
+        )
+    if args.batch % (4 * d):
+        raise SystemExit(
+            f"--batch {args.batch} must divide into the service's batch "
+            f"buckets over {d} data shards (make it a multiple of {4 * d})"
+        )
+    mesh = make_serving_mesh(d, i)
+    print(f"sharding index over mesh {dict(mesh.shape)} "
+          f"(payload per item-shard ~{index.payload_nbytes // i / 1e6:.1f} MB)")
+    return index.shard(mesh)
 
 
 def _drive(svc: AdaCURService, args, cfg: AdaCURConfig,

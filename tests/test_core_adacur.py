@@ -7,7 +7,20 @@ import numpy as np
 import pytest
 
 from repro.configs.base import AdaCURConfig
-from repro.core import adacur, anncur, retrieval
+from repro.core import adacur, retrieval
+from repro.core.engine import ANNCURRetriever
+from repro.core.index import AnchorIndex
+
+
+def _anncur_search(dom, k_anchor, budget, k_retrieve, key=7):
+    """ANNCUR through its first-class home: AnchorIndex latents + the
+    engine's ANNCURRetriever (the deprecated shim module is gone)."""
+    index = AnchorIndex.from_r_anc(dom["r_anc"]).with_latents(
+        k_anchor=k_anchor, key=jax.random.PRNGKey(key)
+    )
+    return ANNCURRetriever.from_index(
+        index, dom["ce"].score_fn(), budget_ce=budget, k_retrieve=k_retrieve
+    ).search(dom["test_q"])
 
 
 def _run_adacur(dom, cfg, seed=3, first=None):
@@ -67,10 +80,7 @@ class TestPaperClaims:
         )
         res = _run_adacur(small_domain, cfg)
         rep = retrieval.evaluate_result("adacur", res, small_domain["exact"])
-        idx = anncur.build_index(small_domain["r_anc"], 50, key=jax.random.PRNGKey(7))
-        res2 = anncur.search(
-            small_domain["ce"].score_fn(), idx, small_domain["test_q"], budget, 100
-        )
+        res2 = _anncur_search(small_domain, 50, budget, 100)
         rep2 = retrieval.evaluate_result("anncur", res2, small_domain["exact"])
         assert rep.recall[100] > rep2.recall[100]
         assert rep.recall[10] >= rep2.recall[10] - 0.02
@@ -142,10 +152,7 @@ class TestANNCUR:
         """ANNCUR's approximate retrieval must beat re-ranking random items."""
         budget = 100
         exact = small_domain["exact"]
-        idx = anncur.build_index(small_domain["r_anc"], 50, key=jax.random.PRNGKey(7))
-        res = anncur.search(
-            small_domain["ce"].score_fn(), idx, small_domain["test_q"], budget, 100
-        )
+        res = _anncur_search(small_domain, 50, budget, 100)
         rep = retrieval.evaluate_result("anncur", res, exact)
         rand_cand = jnp.tile(
             jax.random.permutation(jax.random.PRNGKey(8), exact.shape[1])[None, :budget],
@@ -158,6 +165,5 @@ class TestANNCUR:
         assert rep.recall[10] > rep_r.recall[10]
 
     def test_budget_below_anchors_raises(self, small_domain):
-        idx = anncur.build_index(small_domain["r_anc"], 50, key=jax.random.PRNGKey(7))
         with pytest.raises(ValueError):
-            anncur.search(small_domain["ce"].score_fn(), idx, small_domain["test_q"], 40, 10)
+            _anncur_search(small_domain, 50, 40, 10)

@@ -8,7 +8,8 @@ import numpy as np
 import pytest
 
 from repro.configs.base import AdaCURConfig, replace
-from repro.core import adacur, anncur, cur, engine, retrieval
+from repro.core import adacur, cur, engine, retrieval
+from repro.core.index import AnchorIndex
 from repro.core.engine import (
     AdaCURRetriever,
     ANNCURRetriever,
@@ -233,10 +234,16 @@ class TestRetrieverAPI:
         assert isinstance(RerankRetriever(sf, r_anc, 40, 20), Retriever)
 
     def test_anncur_as_engine_config(self, small_domain):
+        """ANNCUR over the first-class index == the bare-array engine
+        configuration with the same fixed anchors."""
         sf = small_domain["ce"].score_fn()
-        idx = anncur.build_index(small_domain["r_anc"], 30, key=jax.random.PRNGKey(7))
-        ref = anncur.search(sf, idx, small_domain["test_q"], 60, 30)
-        ret = ANNCURRetriever(sf, small_domain["r_anc"], idx.anchor_idx, 60, 30)
+        idx = AnchorIndex.from_r_anc(small_domain["r_anc"]).with_latents(
+            k_anchor=30, key=jax.random.PRNGKey(7)
+        )
+        ref = ANNCURRetriever.from_index(idx, sf, budget_ce=60, k_retrieve=30).search(
+            small_domain["test_q"]
+        )
+        ret = ANNCURRetriever(sf, small_domain["r_anc"], idx.anchor_item_pos, 60, 30)
         res = ret.search(small_domain["test_q"])
         assert _overlap(res.topk_idx, ref.topk_idx) >= 0.99
 
@@ -263,10 +270,12 @@ class TestRetrieverAPI:
             small_domain["test_q"], jax.random.PRNGKey(3)
         )
         rep = retrieval.evaluate_result("adacur", res, small_domain["exact"])
-        idx = anncur.build_index(small_domain["r_anc"], 50, key=jax.random.PRNGKey(7))
-        res2 = ANNCURRetriever(sf, small_domain["r_anc"], idx.anchor_idx, 100, 100).search(
-            small_domain["test_q"]
+        idx = AnchorIndex.from_r_anc(small_domain["r_anc"]).with_anchors(
+            k_anchor=50, key=jax.random.PRNGKey(7)
         )
+        res2 = ANNCURRetriever(
+            sf, small_domain["r_anc"], idx.anchor_item_pos, 100, 100
+        ).search(small_domain["test_q"])
         rep2 = retrieval.evaluate_result("anncur", res2, small_domain["exact"])
         assert rep.recall[100] > rep2.recall[100]
 

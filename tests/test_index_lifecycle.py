@@ -1,8 +1,7 @@
 """AnchorIndex lifecycle: build -> interrupt -> resume bit-parity, stale
 manifest invalidation (the block_rows regression), save -> load -> search
 round-trip parity, add_items/remove_items parity vs a from-scratch rebuild
-(and no-retrace), external item ids, the deprecated ANNCUR view, and the
-index-first service."""
+(and no-retrace), external item ids, and the index-first service."""
 
 import json
 import os
@@ -13,7 +12,6 @@ import numpy as np
 import pytest
 
 from repro.configs.base import AdaCURConfig
-from repro.core import anncur
 from repro.core.engine import AdaCURRetriever, ANNCURRetriever, RerankRetriever
 from repro.core.index import AnchorIndex, build_r_anc
 from repro.data.synthetic import make_synthetic_ce
@@ -329,30 +327,27 @@ class TestShardedTopk:
         np.testing.assert_allclose(np.asarray(v0), np.asarray(v1), rtol=1e-5)
 
 
-class TestDeprecatedANNCURView:
-    def test_build_index_is_a_view(self, dom):
-        with pytest.warns(DeprecationWarning):
-            legacy = anncur.build_index(dom["m"][:40], 10, key=jax.random.PRNGKey(7))
-        assert isinstance(legacy.parent, AnchorIndex)
-        np.testing.assert_array_equal(
-            np.asarray(legacy.anchor_idx), np.asarray(legacy.parent.anchor_item_pos)
-        )
-        np.testing.assert_array_equal(
-            np.asarray(legacy.item_embeddings),
-            np.asarray(legacy.parent.item_embeddings),
-        )
+class TestANNCURLivesInTheIndex:
+    """The deprecated ``core.anncur`` shim module is gone: its offline
+    product is ``with_latents`` and its search is ``ANNCURRetriever``."""
 
-    def test_search_delegates_to_engine(self, dom):
+    def test_shim_module_removed(self):
+        with pytest.raises(ImportError):
+            from repro.core import anncur  # noqa: F401
+
+    def test_latents_index_drives_the_engine(self, dom):
         sf = dom["ce"].score_fn()
-        with pytest.warns(DeprecationWarning):
-            legacy = anncur.build_index(dom["m"][:40], 10, key=jax.random.PRNGKey(7))
-        with pytest.warns(DeprecationWarning):
-            res = anncur.search(sf, legacy, dom["test_q"], 20, 10)
-        ref = ANNCURRetriever.from_index(
-            legacy.parent, sf, budget_ce=20, k_retrieve=10
+        index = AnchorIndex.from_r_anc(dom["m"][:40]).with_latents(
+            k_anchor=10, key=jax.random.PRNGKey(7)
+        )
+        assert index.has_latents
+        res = ANNCURRetriever.from_index(
+            index, sf, budget_ce=20, k_retrieve=10
         ).search(dom["test_q"])
-        np.testing.assert_array_equal(
-            np.asarray(res.topk_idx), np.asarray(ref.topk_idx)
+        # retrieved scores are the exact CE scores of the retrieved ids
+        ref = jnp.take_along_axis(dom["m"][40:], res.topk_idx, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(res.topk_scores), np.asarray(ref), rtol=1e-5, atol=1e-5
         )
 
 
