@@ -1,0 +1,166 @@
+"""Budget-matched IR quality matrix -> ``BENCH_quality.json``.
+
+One command, three claims, all measured:
+
+- **quality**: recall@k / MRR@k / NDCG@k (CE-top-1 pseudo-qrels) and the
+  paper's Top-k-Recall for every retrieval strategy the repo implements —
+  ADACUR, ANNCUR, DE retrieve-and-rerank, and the multi-stage hybrids
+  (DE / BM25 shortlist -> candidate-restricted ADACUR) — at the SAME
+  exact-CE-call budget.  The CI gate asserts hybrid_de recall@1 >=
+  rerank_de recall@1: spending the budget adaptively over a first-stage
+  shortlist beats spending it all on one rerank pass;
+- **accounting**: every method's CE spend is measured by its own
+  TabulatedScorer and must equal the engine plan (budget_matched);
+- **subset engine**: the candidate-subset search (gathered sub-index +
+  ``pos_map``) is bit-identical to the masked full-corpus search over the
+  candidate union, and sweeping *different candidate sets* through one
+  HybridRetriever compiles exactly one executable (zero retraces).
+
+CLI:  PYTHONPATH=src python -m benchmarks.quality_matrix [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AdaCURConfig
+from repro.core.candidates import (
+    DualEncoderCandidates,
+    HybridRetriever,
+    candidate_eligibility,
+)
+from repro.core.engine import make_engine
+from repro.core.index import AnchorIndex
+from repro.core.scorer import TabulatedScorer
+from repro.data.synthetic import lexical_signatures, make_synthetic_ce
+from repro.eval.harness import quality_matrix
+
+from .common import emit, timed
+
+
+def bench_matrix(fast: bool, seed: int = 0) -> dict:
+    n_items = 2000 if fast else 10000
+    n_train, n_test = (200, 60) if fast else (500, 100)
+    budget = 100 if fast else 200
+    ce = make_synthetic_ce(
+        jax.random.PRNGKey(seed), n_queries=n_train + n_test, n_items=n_items
+    )
+    m = np.asarray(ce.full_matrix(jnp.arange(n_train + n_test)))
+    index = AnchorIndex.from_r_anc(
+        m[:n_train], anchor_query_ids=jnp.arange(n_train)
+    )
+    test_q = jnp.arange(n_train, n_train + n_test)
+    sig_seed = seed + 3
+    reports = quality_matrix(
+        ce, index, test_q, m, budget=budget, ks=(1, 10, 100),
+        corpus_tokens=lexical_signatures(ce.i_emb, seed=sig_seed),
+        query_tokens=lexical_signatures(ce.q_emb, seed=sig_seed),
+        seed=seed,
+    )
+    for r in reports:
+        emit(
+            f"quality_matrix/{r.method}/B{budget}", r.wall_us_per_query,
+            f"recall@1={r.ir['recall@1']:.3f};ndcg@10={r.ir['ndcg@10']:.3f};"
+            f"topk_recall@100={r.topk_recall[100]:.3f};"
+            f"measured={r.measured_ce};planned={r.planned_ce}",
+        )
+    return {
+        "budget": budget,
+        "n_items": n_items,
+        "n_test": n_test,
+        "methods": {r.method: r.to_json() for r in reports},
+    }
+
+
+def bench_subset_engine(fast: bool, seed: int = 0) -> dict:
+    """Subset-vs-masked bit-parity + the zero-retrace sweep."""
+    n_items = 1024 if fast else 4096
+    n_q = 96
+    batch = 8
+    ce = make_synthetic_ce(
+        jax.random.PRNGKey(seed + 10), n_queries=n_q, n_items=n_items
+    )
+    m = np.asarray(ce.full_matrix(jnp.arange(n_q)))
+    k_q = 64
+    r_anc = jnp.asarray(m[:k_q])
+    cfg = AdaCURConfig(
+        k_anchor=20, n_rounds=4, budget_ce=60, k_retrieve=20,
+        strategy="topk", loop_mode="fori",
+    )
+    de = DualEncoderCandidates(ce.q_emb, ce.i_emb)
+    scorer = TabulatedScorer(m)
+    hyb = HybridRetriever(
+        score_fn=scorer, generator=de, cfg=cfg, r_anc=r_anc,
+        shortlist_k=96, mode="subset",
+    )
+    key = jax.random.PRNGKey(seed + 11)
+    qids = jnp.arange(batch)
+    res_sub, us_sub = timed(lambda: hyb.search(qids, key), warmup=1)
+
+    # masked full-corpus reference: same engine config, candidate-union mask
+    elig = candidate_eligibility(de(qids, 96), n_items, per_query=False)
+    run = make_engine(TabulatedScorer(m), cfg)
+    res_mask, us_mask = timed(
+        lambda: run(hyb.r_anc, qids, key, eligible=elig), warmup=1
+    )
+    parity = bool(
+        np.array_equal(np.asarray(res_sub.topk_idx), np.asarray(res_mask.topk_idx))
+        and np.array_equal(
+            np.asarray(res_sub.topk_scores), np.asarray(res_mask.topk_scores)
+        )
+    )
+
+    # zero retraces across DIFFERENT candidate sets (query batches)
+    traces = lambda: getattr(hyb._run, "_cache_size", lambda: -1)()
+    warm = traces()
+    for lo in range(0, n_q - batch, batch):
+        jax.block_until_ready(
+            hyb.search(jnp.arange(lo, lo + batch), jax.random.PRNGKey(lo))
+        )
+    retraces = traces() - warm
+
+    jax.effects_barrier()
+    before = scorer.stats.copy()
+    jax.block_until_ready(hyb.search(qids, jax.random.PRNGKey(99)))
+    jax.effects_barrier()
+    measured = (scorer.stats - before).ce_calls // batch
+
+    emit("quality_matrix/subset_engine", us_sub,
+         f"parity={parity};retraces={retraces};measured={measured};"
+         f"planned={hyb.ce_call_plan()};mask_us={us_mask:.0f}")
+    return {
+        "parity_vs_masked": parity,
+        "retraces_across_candidate_sets": retraces,
+        "measured_ce": measured,
+        "planned_ce": hyb.ce_call_plan(),
+        "subset_us_per_batch": us_sub,
+        "masked_us_per_batch": us_mask,
+    }
+
+
+def run(fast: bool = False, json_path: str = "BENCH_quality.json") -> dict:
+    out = {
+        "matrix": bench_matrix(fast),
+        "subset_engine": bench_subset_engine(fast),
+    }
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default="BENCH_quality.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(fast=args.fast, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

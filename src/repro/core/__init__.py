@@ -5,7 +5,10 @@
 - ``adacur``    Algorithm 1 reference implementation (growing shapes)
 - ``engine``    static-shape round engine + unified Retriever API (hot path),
                 single-device and SPMD ((data x items) mesh via shard_map)
+- ``candidates`` first-stage candidate generation (dual-encoder / BM25 /
+                oracle) + candidate-subset hybrid retrieval
 - ``retrieval`` budget-matched retrieve-and-rerank + recall metrics
+                (implementations in ``repro.eval.metrics``)
 - ``index``     the AnchorIndex offline artifact (build/save/load/shard/mutate)
 - ``scorer``    the Scorer subsystem (synthetic/tabulated/real CE + cache)
 
@@ -15,8 +18,18 @@ ANNCUR lives inside this API: the offline product is
 removed after its deprecation cycle).
 """
 
-from . import adacur, cur, engine, index, retrieval, sampling, scorer  # noqa: F401
+from . import adacur, candidates, cur, engine, index, retrieval, sampling, scorer  # noqa: F401
 from .adacur import AdaCURResult, adacur_search, make_jitted_search  # noqa: F401
+from .candidates import (  # noqa: F401
+    BM25Candidates,
+    CandidateGenerator,
+    DualEncoderCandidates,
+    GeneratorStats,
+    HybridRetriever,
+    OracleCandidates,
+    candidate_eligibility,
+    union_candidates,
+)
 from .engine import (  # noqa: F401
     AdaCURRetriever,
     ANNCURRetriever,

@@ -135,10 +135,12 @@ class ShardCtx(NamedTuple):
     n_item_shards: int
     item_shard: Any                       # () int32 shard index (0 unsharded)
     row_offset: Any                       # global row of local batch row 0
+    col_map: Any = None                   # (N_local,) global item position of
+                                          # each local column (None = identity)
 
 
-def _local_ctx(n_items: int) -> ShardCtx:
-    return ShardCtx(None, (), n_items, 1, 0, 0)
+def _local_ctx(n_items: int, col_map=None) -> ShardCtx:
+    return ShardCtx(None, (), n_items, 1, 0, 0, col_map)
 
 
 def _axes_index(axes: Tuple[str, ...]) -> jax.Array:
@@ -157,6 +159,21 @@ def _item_offset(ctx: ShardCtx):
 
 def _psum_items(ctx: ShardCtx, x: jax.Array) -> jax.Array:
     return jax.lax.psum(x, ctx.item_axes) if ctx.item_axes else x
+
+
+def _noise(ctx: ShardCtx, key: jax.Array, rows: int) -> jax.Array:
+    """This context's (rows, N_local) rectangle of the canonical noise field.
+
+    A candidate-subset context (``col_map`` set) holds columns gathered from
+    scattered corpus positions; it evaluates the field at those *global*
+    coordinates (:func:`sampling.gumbel_at`), so every draw matches the bits
+    a masked full-corpus search would have seen at the same columns — the
+    subset-vs-masked bit-parity contract."""
+    if ctx.col_map is not None:
+        return sampling.gumbel_at(key, rows, ctx.col_map, ctx.row_offset)
+    return sampling.blocked_gumbel(
+        key, rows, ctx.n_local, ctx.row_offset, _item_offset(ctx)
+    )
 
 
 def _merge_topk(ctx: ShardCtx, vals: jax.Array, gidx: jax.Array, k: int):
@@ -193,7 +210,7 @@ def _sample_random_ctx(
     shard-decomposed twin of ``sampling.sample_random`` (same noise field,
     same masked-Gumbel formula, so the single-shard case is bit-equal)."""
     b, n_local = selected.shape
-    g = sampling.blocked_gumbel(key, b, n_local, ctx.row_offset, _item_offset(ctx))
+    g = _noise(ctx, key, b)
     logits = jnp.where(selected, sampling.NEG_INF, 0.0) + g
     return _local_topk_merge(ctx, logits, k)
 
@@ -329,27 +346,24 @@ def _sample_round(
     merge (:func:`_merge_topk`)."""
     sharded = ctx.item_axes is not None
     b, n_local = state.selected.shape
-    if cfg.strategy == "random" and (sharded or cfg.use_fused_topk):
+    remapped = ctx.col_map is not None
+    if cfg.strategy == "random" and (sharded or remapped or cfg.use_fused_topk):
         return _sample_random_ctx(ctx, key, state.selected, k_eff)
     if not cfg.use_fused_topk:
         s_hat = quant.matmul(state.e_q, r_anc)
-        if not sharded:
+        if not sharded and not remapped:
             return sampling.sample(
                 cfg.strategy, key, s_hat, state.selected, k_eff, cfg.softmax_temp
             )
         logits = sampling._masked_logits(s_hat, state.selected, cfg.softmax_temp)
         if cfg.strategy == "softmax":
-            logits = logits + sampling.blocked_gumbel(
-                key, b, n_local, ctx.row_offset, _item_offset(ctx)
-            )
+            logits = logits + _noise(ctx, key, b)
         return _local_topk_merge(ctx, logits, k_eff)
     suppress = _fused_suppress(cfg, state, force_mask or sharded)
     if cfg.strategy == "softmax":
         # temp folds into e_q (scores/temp == (e_q/temp) @ R_anc); Gumbel
         # noise enters the kernel as an input, S_hat stays in VMEM.
-        g = sampling.blocked_gumbel(
-            key, b, n_local, ctx.row_offset, _item_offset(ctx)
-        )
+        g = _noise(ctx, key, b)
         e_q = state.e_q / jnp.asarray(cfg.softmax_temp, state.e_q.dtype)
         v, idx = approx_topk_op(
             e_q, r_anc, k=k_eff, tile=_effective_tile(cfg, r_anc),
@@ -437,15 +451,18 @@ def _provisional_topk(
 ):
     """Top-m candidate ids of S_hat (unmasked) — the early-exit monitor.
 
-    ``invalid`` is the (N_local,) runtime invalid-column mask of a dynamic
-    corpus (padded capacity); it replaces the static ``n_valid`` bound.
-    Returns global ids (merged on a sharded context)."""
+    ``invalid`` is the runtime invalid-column mask of a dynamic corpus
+    (padded capacity) — (N_local,), or (B, N_local) when a per-query
+    eligibility restriction is in play; it replaces the static ``n_valid``
+    bound.  Returns global ids (merged on a sharded context)."""
     ctx = ctx or _local_ctx(r_anc.shape[1])
     sharded = ctx.item_axes is not None
+    if invalid is not None and invalid.ndim == 1:
+        invalid = invalid[None, :]
     if cfg.use_fused_topk:
         mask = (
             None if invalid is None
-            else jnp.broadcast_to(invalid[None, :], (e_q.shape[0], r_anc.shape[1]))
+            else jnp.broadcast_to(invalid, (e_q.shape[0], r_anc.shape[1]))
         )
         v, idx = approx_topk_op(
             e_q, r_anc, None, m, tile=_effective_tile(cfg, r_anc),
@@ -459,7 +476,7 @@ def _provisional_topk(
     if n_valid is not None and not sharded and n_valid < s_hat.shape[1]:
         s_hat = jnp.where(jnp.arange(s_hat.shape[1]) < n_valid, s_hat, sampling.NEG_INF)
     if invalid is not None:
-        s_hat = jnp.where(invalid[None, :], sampling.NEG_INF, s_hat)
+        s_hat = jnp.where(invalid, sampling.NEG_INF, s_hat)
     return _local_topk_merge(ctx, s_hat, m)
 
 
@@ -490,6 +507,8 @@ def engine_search(
     n_rounds=None,
     return_scores: Optional[bool] = None,
     item_ids: Optional[jax.Array] = None,
+    eligible: Optional[jax.Array] = None,
+    pos_map: Optional[jax.Array] = None,
     _ctx: Optional[ShardCtx] = None,
 ) -> AdaCURResult:
     """Run Algorithm 1 (+ retrieval) through the static-shape round engine.
@@ -520,6 +539,23 @@ def engine_search(
     payload inside the trace (an AnchorIndex-backed retriever pre-quantizes
     instead — see ``Retriever.from_index``).
 
+    Multi-stage retrieval (``core/candidates.py``) adds two runtime
+    operands.  ``eligible`` — (N,) or per-query (B, N) bool — restricts the
+    search to a candidate set over the full corpus: ineligible items are
+    never sampled, never reranked, and are excluded from the early-exit
+    monitor, while CE accounting is untouched (:func:`ce_call_plan` holds
+    verbatim — the first stage spends no CE calls and every round still
+    scores exactly k_s items, so callers must supply at least
+    ``budget_ce`` eligible items per row).  ``pos_map`` — (N,) int32,
+    ascending — declares the engine's columns to be a *candidate subset*
+    gathered from those global corpus positions (see
+    :func:`quant.subset_columns`): all noise draws then evaluate the
+    canonical field at the mapped coordinates, which makes the subset
+    search bit-identical to an ``eligible``-masked full-corpus search
+    (ascending order preserves the ascending-id tie-break contract).
+    Result indices stay in engine-local (subset) coordinates; callers remap
+    through ``pos_map`` (as :class:`HybridRetriever` does).
+
     ``_ctx`` is the shard context when this call is the per-shard body of
     the SPMD engine (:func:`make_sharded_engine`); ``r_anc``/``item_ids``
     are then this shard's LOCAL slabs and ``query`` the local batch rows,
@@ -527,7 +563,12 @@ def engine_search(
     """
     r_anc = quant.as_payload(r_anc, cfg.payload_dtype, cfg.payload_tile)
     k_q, n_items = r_anc.shape
-    ctx = _ctx or _local_ctx(n_items)
+    if pos_map is not None and _ctx is not None:
+        raise ValueError(
+            "pos_map (candidate-subset search) is single-shard only; under "
+            "a mesh use the eligible mask over the sharded full corpus"
+        )
+    ctx = _ctx or _local_ctx(n_items, pos_map)
     sharded = ctx.item_axes is not None
     n_global = n_items * ctx.n_item_shards
     k_i = cfg.budget_ce if not cfg.split_budget else cfg.k_anchor
@@ -563,7 +604,17 @@ def engine_search(
         else:
             nv = jnp.minimum(jnp.asarray(n_valid_items, jnp.int32), n_items)
             invalid = jnp.arange(n_items, dtype=jnp.int32) >= nv
-    dyn_valid = invalid is not None
+    if eligible is not None:
+        eligible = jnp.asarray(eligible, bool)
+        if eligible.ndim == 1:
+            eligible = eligible[None, :]
+    # the early-exit monitor's invalid mask: padded tail + ineligible items
+    mon_invalid = invalid
+    if eligible is not None:
+        mon_invalid = (
+            ~eligible if invalid is None else (~eligible | invalid[None, :])
+        )
+    dyn_valid = invalid is not None or eligible is not None
     if cfg.loop_mode == "unrolled" and n_rounds is not None:
         raise ValueError("runtime n_rounds override requires loop_mode='fori'")
 
@@ -600,6 +651,8 @@ def engine_search(
         selected = selected | (jnp.arange(n_items) >= n_valid)
     if invalid is not None:
         selected = selected | invalid[None, :]
+    if eligible is not None:
+        selected = selected | ~eligible
 
     # same RNG stream as the seed path: keys[r] drives round r
     keys = jax.random.split(key, r_max + 1)
@@ -650,7 +703,9 @@ def engine_search(
         r_dyn = jnp.clip(r_dyn, 1, r_max)
         if cfg.early_exit_tol > 0.0:
             m = min(cfg.k_retrieve, n_global)
-            prev = _provisional_topk(cfg, state.e_q, r_anc, m, n_valid, invalid, ctx)
+            prev = _provisional_topk(
+                cfg, state.e_q, r_anc, m, n_valid, mon_invalid, ctx
+            )
 
             def cond(carry):
                 r, frac, _, _ = carry
@@ -660,7 +715,7 @@ def engine_search(
                 r, _, st, prev_top = carry
                 st = body(r, st)
                 cur_top = _provisional_topk(
-                    cfg, st.e_q, r_anc, m, n_valid, invalid, ctx
+                    cfg, st.e_q, r_anc, m, n_valid, mon_invalid, ctx
                 )
                 hit = (cur_top[:, :, None] == prev_top[:, None, :]).any(-1)
                 return r + 1, _global_frac(ctx, hit), st, cur_top
@@ -744,19 +799,20 @@ def make_engine(
         raise ValueError("jit_compile=False requires loop_mode='unrolled'")
 
     def _run(r_anc, query, key, n_rounds, first_anchors=None, batch=None,
-             n_valid=None, item_ids=None):
+             n_valid=None, item_ids=None, eligible=None, pos_map=None):
         return engine_search(
             score_fn, r_anc, query, cfg, key,
             first_anchors=first_anchors, batch=batch,
             n_valid_items=n_valid if n_valid is not None else n_valid_items,
             n_rounds=n_rounds, return_scores=return_scores, item_ids=item_ids,
+            eligible=eligible, pos_map=pos_map,
         )
 
     if jit_compile:
         _run = partial(jax.jit, static_argnames=("batch",))(_run)
 
     def run(r_anc, query, key, first_anchors=None, batch=None, n_rounds=None,
-            n_valid=None, item_ids=None):
+            n_valid=None, item_ids=None, eligible=None, pos_map=None):
         if cfg.loop_mode == "fori":
             n_rounds = jnp.asarray(
                 cfg.n_rounds if n_rounds is None else n_rounds, jnp.int32
@@ -766,7 +822,7 @@ def make_engine(
         if n_valid is not None:
             n_valid = jnp.asarray(n_valid, jnp.int32)
         return _run(r_anc, query, key, n_rounds, first_anchors, batch,
-                    n_valid, item_ids)
+                    n_valid, item_ids, eligible, pos_map)
 
     return run
 
@@ -876,7 +932,8 @@ def make_sharded_engine(
             )
         return n_local
 
-    def core(r_anc, query, key, n_rounds, n_valid, item_ids, first_anchors):
+    def core(r_anc, query, key, n_rounds, n_valid, item_ids, first_anchors,
+             eligible):
         n_local = r_anc.shape[1]
         b_local = jax.tree_util.tree_leaves(query)[0].shape[0]
         ctx = ShardCtx(
@@ -891,7 +948,8 @@ def make_sharded_engine(
             score_fn, r_anc, query, cfg, key,
             first_anchors=first_anchors,
             n_valid_items=n_valid, n_rounds=n_rounds,
-            return_scores=False, item_ids=item_ids, _ctx=ctx,
+            return_scores=False, item_ids=item_ids, eligible=eligible,
+            _ctx=ctx,
         )
         return (res.anchor_idx, res.anchor_scores, res.topk_idx,
                 res.topk_scores, res.rounds_done)
@@ -899,7 +957,12 @@ def make_sharded_engine(
     compiled = {}          # (has_first, query treedef/ranks) -> jitted fn
 
     def run(r_anc, query, key, first_anchors=None, batch=None, n_rounds=None,
-            n_valid=None, item_ids=None):
+            n_valid=None, item_ids=None, eligible=None, pos_map=None):
+        if pos_map is not None:
+            raise ValueError(
+                "pos_map (candidate-subset search) is single-shard only; "
+                "pass eligible= to restrict a sharded search"
+            )
         if cfg.loop_mode == "fori":
             n_rounds = jnp.asarray(
                 cfg.n_rounds if n_rounds is None else n_rounds, jnp.int32
@@ -930,13 +993,22 @@ def make_sharded_engine(
             if data_axes else P(),
             query,
         )
+        if eligible is not None:
+            eligible = jnp.asarray(eligible, bool)
         sig = (
             first_anchors is not None,
             jax.tree_util.tree_structure(query),
             tuple(jnp.ndim(l) for l in jax.tree_util.tree_leaves(query)),
             quant.payload_dtype_of(r_anc),
+            None if eligible is None else eligible.ndim,
         )
         if sig not in compiled:
+            if eligible is None:
+                eligible_spec = None
+            elif eligible.ndim == 1:
+                eligible_spec = P(item_axes)
+            else:
+                eligible_spec = P(data_axes if data_axes else None, item_axes)
             in_specs = (
                 _payload_specs(r_anc, item_axes),     # r_anc
                 query_specs,                          # query
@@ -945,15 +1017,16 @@ def make_sharded_engine(
                 P(),                                  # n_valid
                 P(item_axes),                         # item_ids
                 data_spec if first_anchors is not None else None,
+                eligible_spec,                        # eligible
             )
             out_specs = (data_spec, data_spec, data_spec, data_spec, P())
 
             live_specs = tuple(s for s in in_specs if s is not None)
 
             def entry(r_anc, query, key, n_rounds, n_valid, item_ids,
-                      first_anchors):
+                      first_anchors, eligible):
                 args = (r_anc, query, key, n_rounds, n_valid, item_ids,
-                        first_anchors)
+                        first_anchors, eligible)
                 live = tuple(a for a, s in zip(args, in_specs) if s is not None)
 
                 def body(*live_args):
@@ -970,7 +1043,8 @@ def make_sharded_engine(
 
             compiled[sig] = jax.jit(entry, static_argnums=())
         anchor_idx, c_test, top_idx, top_s, rounds_done = compiled[sig](
-            r_anc, query, key, n_rounds, n_valid, item_ids, first_anchors
+            r_anc, query, key, n_rounds, n_valid, item_ids, first_anchors,
+            eligible,
         )
         return AdaCURResult(
             anchor_idx, c_test, None, top_idx, top_s,

@@ -4,15 +4,24 @@ Implements the paper's evaluation protocol (§3): every method is given the
 same test-time budget of exact CE calls.  Retrieve-and-rerank baselines
 (dual-encoder / TF-IDF) spend the whole budget re-ranking their own top
 candidates; ANNCUR/ADACUR split it between anchors and re-ranking.
+
+The metric implementations live in :mod:`repro.eval.metrics` (one
+implementation serves this module, the IR harness and the benchmarks);
+``topk_recall`` / ``RecallReport`` / ``evaluate_result`` / ``exact_topk``
+are re-exported here for backward compatibility.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-
 import jax
 import jax.numpy as jnp
 
+from ..eval.metrics import (  # noqa: F401  (re-exported compat surface)
+    RecallReport,
+    evaluate_result,
+    exact_topk,
+    topk_recall,
+)
 from .adacur import AdaCURResult, ScoreFn
 
 
@@ -31,38 +40,3 @@ def rerank_baseline(
     top_s, top_pos = jax.lax.top_k(scores, k)
     top_idx = jnp.take_along_axis(cand, top_pos, axis=1)
     return AdaCURResult(cand, scores, scores, top_idx, top_s, budget_ce)
-
-
-def exact_topk(exact_scores: jax.Array, k: int):
-    """Ground-truth top-k under the cross-encoder (for recall eval)."""
-    return jax.lax.top_k(exact_scores, k)
-
-
-def topk_recall(retrieved_idx: jax.Array, gt_idx: jax.Array, k: int) -> jax.Array:
-    """Top-k-Recall: |retrieved ∩ gt_topk| / k, averaged over the batch.
-
-    ``retrieved_idx`` may contain more than k entries (paper convention:
-    recall of the ground-truth top-k within the method's returned set).
-    """
-    hits = (retrieved_idx[:, :, None] == gt_idx[:, None, :k]).any(axis=1)
-    return hits.mean()
-
-
-@dataclass
-class RecallReport:
-    method: str
-    budget_ce: int
-    recall: dict  # k -> float
-
-
-def evaluate_result(
-    method: str,
-    result: AdaCURResult,
-    exact_scores: jax.Array,
-    ks=(1, 10, 100),
-) -> RecallReport:
-    out = {}
-    for k in ks:
-        _, gt = exact_topk(exact_scores, k)
-        out[k] = float(topk_recall(result.topk_idx, gt, k))
-    return RecallReport(method, result.ce_calls, out)

@@ -67,6 +67,45 @@ def blocked_gumbel(
     return g.reshape(rows, nb * NOISE_BLOCK)[:, :n]
 
 
+def gumbel_at(
+    key: jax.Array,
+    rows: int,
+    col_pos: jax.Array,
+    row_offset=0,
+) -> jax.Array:
+    """(rows, len(col_pos)) noise — the canonical field at *scattered* item
+    coordinates.
+
+    ``col_pos`` (C,) int32 holds global item positions, not necessarily
+    contiguous or block-aligned: entry (i, j) is the field value at global
+    coordinates (row_offset + i, col_pos[j]), bit-equal to the corresponding
+    entry of :func:`blocked_gumbel`.  This is what makes a candidate-subset
+    search (columns gathered into a compact sub-index) bit-identical to the
+    same search masked over the full corpus: the sub-index evaluates the
+    noise the full index would have seen at those columns.
+
+    Cost is one NOISE_BLOCK draw per (row, column) — the field is only
+    addressable per block — so this is O(rows * C * NOISE_BLOCK) generated
+    bits, intended for shortlist-sized C, not the full corpus.
+    """
+    col_pos = jnp.asarray(col_pos, jnp.int32)
+    row_ids = jnp.asarray(row_offset, jnp.int32) + jnp.arange(rows, dtype=jnp.int32)
+    blk_ids = col_pos // NOISE_BLOCK
+    offsets = col_pos % NOISE_BLOCK
+    row_keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(row_ids)
+
+    def _one(rk):
+        def _col(b, o):
+            blk = jax.random.gumbel(
+                jax.random.fold_in(rk, b), (NOISE_BLOCK,), dtype=jnp.float32
+            )
+            return blk[o]
+
+        return jax.vmap(_col)(blk_ids, offsets)
+
+    return jax.vmap(_one)(row_keys)
+
+
 def _masked_logits(scores: jax.Array, selected: jax.Array, temp: float) -> jax.Array:
     """SoftMax(S) with already-selected items masked out (Alg. 3 lines 7-8)."""
     logits = scores / jnp.asarray(temp, scores.dtype)

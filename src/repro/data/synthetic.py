@@ -122,6 +122,33 @@ def make_synthetic_ce(
     return SyntheticCE(q_emb, i_emb, mix_a, mix_b, mix_w, gamma, sigma)
 
 
+def lexical_signatures(
+    emb,
+    n_terms: int = 8,
+    n_planes: int = 64,
+    seed: int = 0,
+) -> np.ndarray:
+    """Signed random-projection "tokens" for an embedding-only corpus.
+
+    The synthetic CE domain has no text, but the BM25 first stage
+    (``repro.core.candidates.BM25Candidates``) needs token sequences.
+    Project each embedding onto ``n_planes`` shared random hyperplanes and
+    keep the ``n_terms`` largest-|projection| planes as that row's terms,
+    sign-split (plane p firing positive and negative are different tokens)
+    — an LSH vocabulary of ``2 * n_planes`` tokens (+1 reserved pad id 0)
+    where cosine-similar rows share terms.  Deterministic in ``seed``, and
+    one seed must be shared between corpus and query sides so their
+    vocabularies align.
+    """
+    emb = np.asarray(emb, dtype=np.float32)
+    rng = np.random.default_rng(seed)
+    planes = rng.standard_normal((emb.shape[1], n_planes)).astype(np.float32)
+    proj = emb @ planes                                   # (B, n_planes)
+    top = np.argsort(-np.abs(proj), axis=1, kind="stable")[:, :n_terms]
+    sign = (np.take_along_axis(proj, top, axis=1) >= 0).astype(np.int32)
+    return (2 * top + sign + 1).astype(np.int32)          # 0 stays the pad id
+
+
 # ---------------------------------------------------------------------------
 # ZESHEL-like token datasets for the trained tiny cross-encoder
 # ---------------------------------------------------------------------------

@@ -1,0 +1,23 @@
+"""Retrieval quality evaluation: metrics + the budget-matched IR harness.
+
+- ``metrics``  Top-k-Recall (paper §3) and qrels-based recall@k / MRR@k /
+               NDCG@k — the single implementation ``repro.core.retrieval``
+               re-exports
+- ``harness``  InformationRetrievalEvaluator-style driver over the unified
+               Retriever API; ``quality_matrix`` is the one-command
+               ADACUR / ANNCUR / rerank / hybrid comparison CI gates on
+"""
+
+from . import metrics  # noqa: F401
+from .metrics import (  # noqa: F401
+    RecallReport,
+    evaluate_result,
+    exact_topk,
+    ir_metrics,
+    qrels_from_exact,
+    qrels_from_gold,
+    topk_recall,
+)
+
+from . import harness  # noqa: F401
+from .harness import MethodReport, evaluate_retriever, quality_matrix  # noqa: F401

@@ -1,0 +1,178 @@
+"""IR evaluation harness: budget-matched quality matrices over retrievers.
+
+``InformationRetrievalEvaluator``-style driver on top of the engine's
+unified Retriever API: run a method over a test query split, collect the
+ranked ids, score them against relevance judgments
+(:func:`repro.eval.metrics.ir_metrics`) AND the paper's Top-k-Recall
+protocol, and cross-check the *measured* CE spend against the engine's
+plan (:func:`repro.core.engine.ce_call_plan`).
+
+:func:`quality_matrix` is the one-command comparison the benchmarks and CI
+gate consume: ADACUR vs ANNCUR vs retrieve-and-rerank vs multi-stage
+hybrid (first-stage candidates -> candidate-restricted ADACUR), every
+method at the SAME exact-CE-call budget, every method's spend measured by
+its own :class:`~repro.core.scorer.TabulatedScorer`.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import AdaCURConfig
+from ..core.candidates import (
+    BM25Candidates,
+    DualEncoderCandidates,
+    HybridRetriever,
+)
+from ..core.engine import (
+    AdaCURRetriever,
+    ANNCURRetriever,
+    RerankRetriever,
+)
+from ..core.scorer import TabulatedScorer, scorer_stats
+from .metrics import evaluate_result, ir_metrics, qrels_from_exact
+from .metrics import Qrels
+
+
+@dataclass
+class MethodReport:
+    """One method's row in a budget-matched quality matrix."""
+
+    method: str
+    planned_ce: int                      # engine plan, per query
+    measured_ce: Optional[int] = None    # scorer-measured, per query
+    budget_matched: Optional[bool] = None  # measured == planned
+    topk_recall: Dict[int, float] = field(default_factory=dict)
+    ir: Dict[str, float] = field(default_factory=dict)
+    wall_us_per_query: float = 0.0
+
+    def to_json(self) -> dict:
+        d = asdict(self)
+        d["topk_recall"] = {str(k): v for k, v in self.topk_recall.items()}
+        return d
+
+
+def evaluate_retriever(
+    name: str,
+    retriever,
+    qids,
+    key,
+    *,
+    exact=None,
+    qrels: Optional[Qrels] = None,
+    ks: Sequence[int] = (1, 10, 100),
+    search_kw: Optional[dict] = None,
+) -> MethodReport:
+    """Run one retriever over the test split and score the ranking.
+
+    ``exact`` (B, N) enables the paper's Top-k-Recall; ``qrels`` enables
+    recall@k/MRR@k/NDCG@k.  When the retriever's ``score_fn`` is a
+    :class:`~repro.core.scorer.Scorer`, the CE spend of this evaluation
+    window is measured and compared to the retriever's plan.
+    """
+    qids = jnp.asarray(qids)
+    b = int(qids.shape[0])
+    stats = scorer_stats(getattr(retriever, "score_fn", None))
+    if stats is not None:
+        jax.effects_barrier()
+        before = stats.copy()
+    t0 = time.perf_counter()
+    res = retriever.search(qids, key, **(search_kw or {}))
+    res = jax.block_until_ready(res)
+    wall_us = (time.perf_counter() - t0) / b * 1e6
+    rep = MethodReport(
+        method=name,
+        planned_ce=int(res.ce_calls),
+        wall_us_per_query=wall_us,
+    )
+    if stats is not None:
+        jax.effects_barrier()
+        delta = stats - before
+        rep.measured_ce = delta.ce_calls // b
+        rep.budget_matched = delta.ce_calls == rep.planned_ce * b
+    if exact is not None:
+        rep.topk_recall = evaluate_result(name, res, exact, ks=ks).recall
+    if qrels is not None:
+        rep.ir = ir_metrics(np.asarray(res.topk_idx), qrels, ks=ks)
+    return rep
+
+
+def quality_matrix(
+    ce,
+    index,
+    test_q,
+    matrix,
+    *,
+    budget: int = 200,
+    n_rounds: int = 5,
+    ks: Sequence[int] = (1, 10, 100),
+    shortlist_k: Optional[int] = None,
+    qrels_k: int = 1,
+    corpus_tokens=None,
+    query_tokens=None,
+    seed: int = 0,
+    use_fused_topk: bool = False,
+) -> List[MethodReport]:
+    """Budget-matched quality matrix: every retrieval strategy this repo
+    implements, at the same CE-call budget, over one synthetic CE domain.
+
+    - ``adacur``       multi-round adaptive anchors (the paper's method)
+    - ``anncur``       fixed anchors, one round (Yadav et al. 2022)
+    - ``rerank_de``    dual-encoder retrieve-and-rerank (whole budget reranks)
+    - ``hybrid_de``    DE shortlist -> candidate-restricted ADACUR
+    - ``hybrid_bm25``  BM25 shortlist -> candidate-restricted ADACUR
+      (only when token data is supplied)
+
+    ``matrix`` is the (n_queries, N) exact score table (rows indexed by
+    global query id) — each method gets its own TabulatedScorer over it, so
+    the spend measurement windows cannot bleed into each other.  ``qrels``
+    are the CE's exact top-``qrels_k`` pseudo-labels.
+    """
+    matrix = np.asarray(matrix, dtype=np.float32)
+    test_q = jnp.asarray(test_q)
+    exact = jnp.asarray(matrix[np.asarray(test_q)])
+    qrels = qrels_from_exact(exact, k=qrels_k)
+    if shortlist_k is None:
+        shortlist_k = min(4 * budget, index.n_items)
+    if shortlist_k < budget:
+        raise ValueError(f"shortlist_k={shortlist_k} < budget={budget}")
+    key = jax.random.PRNGKey(seed)
+    k_anchor = max(n_rounds, (budget // 2) // n_rounds * n_rounds)
+    cfg = AdaCURConfig(
+        k_anchor=k_anchor, n_rounds=n_rounds, budget_ce=budget,
+        strategy="topk", k_retrieve=max(ks), loop_mode="fori",
+        use_fused_topk=use_fused_topk,
+    )
+    de = DualEncoderCandidates(ce.q_emb, ce.i_emb, n_valid=index.n_items)
+    ev = lambda name, ret, **kw: evaluate_retriever(
+        name, ret, test_q, key, exact=exact, qrels=qrels, ks=ks, **kw
+    )
+
+    reports = [
+        ev("adacur", AdaCURRetriever.from_index(
+            index, TabulatedScorer(matrix), cfg)),
+        ev("anncur", ANNCURRetriever.from_index(
+            index.with_anchors(k_anchor=cfg.k_anchor,
+                               key=jax.random.PRNGKey(seed + 1)),
+            TabulatedScorer(matrix), budget, k_retrieve=cfg.k_retrieve)),
+        ev("rerank_de", RerankRetriever.from_index(
+            index, TabulatedScorer(matrix), budget,
+            k_retrieve=cfg.k_retrieve),
+            search_kw=dict(candidate_idx=de(test_q, budget))),
+        ev("hybrid_de", HybridRetriever(
+            score_fn=TabulatedScorer(matrix), generator=de, cfg=cfg,
+            index=index, shortlist_k=shortlist_k, mode="mask")),
+    ]
+    if corpus_tokens is not None and query_tokens is not None:
+        bm = BM25Candidates(corpus_tokens, query_tokens,
+                            n_valid=index.n_items)
+        reports.append(ev("hybrid_bm25", HybridRetriever(
+            score_fn=TabulatedScorer(matrix), generator=bm, cfg=cfg,
+            index=index, shortlist_k=shortlist_k, mode="mask")))
+    return reports

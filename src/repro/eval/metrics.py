@@ -1,0 +1,143 @@
+"""Retrieval quality metrics: the paper's Top-k-Recall plus standard IR
+measures (recall@k, MRR@k, NDCG@k) over explicit relevance judgments.
+
+This module is the single implementation — ``repro.core.retrieval``
+re-exports :func:`topk_recall` / :class:`RecallReport` /
+:func:`evaluate_result` for backward compatibility.  It deliberately
+imports nothing from ``repro`` (pure jax/numpy), so any layer can depend
+on it without cycles.
+
+Two complementary views of quality:
+
+- **Top-k-Recall** (paper §3): fraction of the cross-encoder's exact top-k
+  found in the method's returned set — ground truth derived from the exact
+  score matrix, no external labels.
+- **qrels metrics** (InformationRetrievalEvaluator-style): recall@k /
+  MRR@k / NDCG@k against explicit per-query relevance judgments
+  (``qrels``) — gold entity labels, CE-top-k pseudo-labels
+  (:func:`qrels_from_exact`), or graded gains.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Mapping, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# per-query relevance: {item_id: gain} (graded) or a set of ids (binary)
+Qrels = Sequence[Union[Mapping[int, float], frozenset, set]]
+
+
+def exact_topk(exact_scores: jax.Array, k: int):
+    """Ground-truth top-k under the cross-encoder (for recall eval)."""
+    return jax.lax.top_k(exact_scores, k)
+
+
+def topk_recall(retrieved_idx: jax.Array, gt_idx: jax.Array, k: int) -> jax.Array:
+    """Top-k-Recall: |retrieved ∩ gt_topk| / k, averaged over the batch.
+
+    ``retrieved_idx`` may contain more than k entries (paper convention:
+    recall of the ground-truth top-k within the method's returned set).
+    """
+    hits = (retrieved_idx[:, :, None] == gt_idx[:, None, :k]).any(axis=1)
+    return hits.mean()
+
+
+@dataclass
+class RecallReport:
+    method: str
+    budget_ce: int
+    recall: dict  # k -> float
+
+
+def evaluate_result(
+    method: str,
+    result,
+    exact_scores: jax.Array,
+    ks=(1, 10, 100),
+) -> RecallReport:
+    """Paper-protocol report for an engine result (``.topk_idx`` /
+    ``.ce_calls``).  The ground-truth ranking is computed ONCE at
+    ``max(ks)`` — prefixes of one descending top-k are the smaller top-ks
+    (ascending-id tie-break is shared), not k separate sorts."""
+    k_max = max(ks)
+    _, gt = exact_topk(exact_scores, k_max)
+    out = {k: float(topk_recall(result.topk_idx, gt, k)) for k in ks}
+    return RecallReport(method, result.ce_calls, out)
+
+
+# ---------------------------------------------------------------------------
+# qrels-based IR metrics
+# ---------------------------------------------------------------------------
+
+
+def qrels_from_exact(exact_scores, k: int = 1) -> Qrels:
+    """Pseudo-qrels from the CE's exact top-k: the judgment set every
+    budget-limited method is trying to recover.  ``k=1`` gives gold-style
+    single-relevant judgments (recall@k == accuracy@k, MRR = 1/rank of the
+    CE argmax)."""
+    _, gt = exact_topk(jnp.asarray(exact_scores), k)
+    gt = np.asarray(gt)
+    return [frozenset(int(i) for i in row) for row in gt]
+
+
+def qrels_from_gold(gold) -> Qrels:
+    """Qrels from a (B,) gold item-id vector (entity-linking labels)."""
+    return [frozenset((int(g),)) for g in np.asarray(gold)]
+
+
+def _gains(rel) -> Dict[int, float]:
+    if isinstance(rel, (set, frozenset)):
+        return {int(i): 1.0 for i in rel}
+    return {int(i): float(g) for i, g in rel.items()}
+
+
+def ir_metrics(
+    ranked, qrels: Qrels, ks: Sequence[int] = (1, 10, 100)
+) -> Dict[str, float]:
+    """recall@k / MRR@k / NDCG@k of a ranked retrieval, batch-averaged.
+
+    ``ranked``: (B, R) item ids in descending relevance order (an engine
+    result's ``topk_idx``).  ``qrels``: per-query judgments (binary sets or
+    graded ``{id: gain}``).  Queries with empty judgments are skipped.
+    Duplicate ids in a row (the engine pads under-filled rankings by
+    repeating the row-best) count once, at their first position.
+    """
+    ranked = np.asarray(ranked)
+    if ranked.ndim != 2 or len(qrels) != ranked.shape[0]:
+        raise ValueError(
+            f"ranked {ranked.shape} does not match {len(qrels)} qrels rows"
+        )
+    sums = {f"{m}@{k}": 0.0 for k in ks for m in ("recall", "mrr", "ndcg")}
+    n_eval = 0
+    for row, rel in zip(ranked, qrels):
+        gains = _gains(rel)
+        if not gains:
+            continue
+        n_eval += 1
+        seen = set()
+        hits = []                       # (position, gain) of first occurrences
+        for pos, item in enumerate(row):
+            item = int(item)
+            if item in seen:
+                continue
+            seen.add(item)
+            if item in gains:
+                hits.append((pos, gains[item]))
+        ideal = sorted(gains.values(), reverse=True)
+        for k in ks:
+            in_k = [(p, g) for p, g in hits if p < k]
+            sums[f"recall@{k}"] += len(in_k) / len(gains)
+            sums[f"mrr@{k}"] += 1.0 / (in_k[0][0] + 1) if in_k else 0.0
+            dcg = sum(g / math.log2(p + 2) for p, g in in_k)
+            idcg = sum(
+                g / math.log2(i + 2) for i, g in enumerate(ideal[:k])
+            )
+            sums[f"ndcg@{k}"] += dcg / idcg if idcg > 0 else 0.0
+    if n_eval == 0:
+        raise ValueError("every qrels row is empty — nothing to evaluate")
+    return {name: v / n_eval for name, v in sums.items()}

@@ -190,6 +190,31 @@ def gather_columns(r_anc, anchor_idx: jax.Array, via_onehot: bool = False):
     return cols * scale[:, None, :]
 
 
+def subset_columns(r_anc, pos: jax.Array, valid: jax.Array):
+    """Gather columns ``pos`` into a compact sub-payload of the same policy.
+
+    The workhorse of candidate-subset search: ``pos`` (C,) are corpus column
+    positions (padded entries may repeat position 0 — ``valid`` (C,) bool
+    marks the real ones) and the result is a (k_q, C) payload whose column j
+    *dequantizes bit-identically* to column ``pos[j]`` of the full payload.
+    For an int8 payload the gathered codes keep their original bytes and
+    each column carries its source tile's scale (``tile=1`` — per-column
+    scales), so no re-quantization happens and whole-tile alignment of the
+    subset is not required.  Invalid columns are exact zeros (codes 0 /
+    scale 1.0 / fp32 0), matching the engine's padded-capacity invariant.
+    """
+    if isinstance(r_anc, QuantizedRanc):
+        codes = jnp.take(r_anc.codes, pos, axis=1)
+        codes = jnp.where(valid[None, :], codes, jnp.int8(0))
+        scales = jnp.where(
+            valid, r_anc.scales[pos // r_anc.tile], jnp.float32(1.0)
+        )
+        return QuantizedRanc(codes=codes, scales=scales, tile=1)
+    r = jnp.asarray(r_anc)
+    cols = jnp.take(r, pos, axis=1)
+    return jnp.where(valid[None, :], cols, jnp.zeros((), r.dtype))
+
+
 # ---------------------------------------------------------------------------
 # Tile-local mutation: re-quantize ONLY the touched tiles.
 # ---------------------------------------------------------------------------

@@ -24,9 +24,16 @@ The production serving loop the paper's technique plugs into:
 - per-request k-NN results with exact CE scores.
 
 CLI:  PYTHONPATH=src python -m repro.launch.serve --requests 64 \
-          --retriever {adacur,anncur,rerank} [--index-path DIR] \
-          [--scorer {synthetic,real-ce}] [--cache] \
+          --retriever {adacur,anncur,rerank} [--first-stage {none,de,bm25}] \
+          [--index-path DIR] [--scorer {synthetic,real-ce}] [--cache] \
           [--payload-dtype {float32,bfloat16,int8}] [--mesh DATAxITEMS]
+
+``--first-stage de|bm25`` serves the multi-stage hybrid: a dual-encoder or
+BM25 generator proposes a per-query shortlist and the ADACUR search is
+restricted to those candidates via the engine's ``eligible`` mask (the
+generator runs outside the compiled search, so it composes with ``--mesh``
+— candidates are computed once per batch, host- or device-side, and the
+sharded engine only sees a boolean operand).
 
 ``--mesh 2x4`` serves over a (data x items) mesh: the index payload shards
 over 8 devices' "items" axis, request batches data-parallel over "data", and
@@ -295,6 +302,13 @@ def main() -> None:
                     help="fused Pallas score->top-k sampling")
     ap.add_argument("--retriever", choices=("adacur", "anncur", "rerank"),
                     default="adacur", help="search method over the index")
+    ap.add_argument("--first-stage", choices=("none", "de", "bm25"),
+                    default="none",
+                    help="multi-stage hybrid retrieval: a dual-encoder or "
+                         "BM25 first stage proposes a per-query shortlist "
+                         "and ADACUR spends the CE budget only on those "
+                         "candidates (engine 'eligible' mask; composes "
+                         "with --mesh). Requires --retriever adacur")
     ap.add_argument("--index-path", default=None,
                     help="AnchorIndex directory: loaded when present, else "
                          "built once and saved there")
@@ -381,7 +395,37 @@ def main() -> None:
         score_fn = CachingScorer(TabulatedScorer(np.asarray(m)))
     else:
         score_fn = SyntheticScorer(ce)
-    retriever = make_retriever(args.retriever, index, score_fn, cfg)
+    if args.first_stage != "none":
+        if args.retriever != "adacur":
+            raise SystemExit(
+                "--first-stage composes the hybrid on top of ADACUR; use "
+                "--retriever adacur (rerank already IS a first-stage method)"
+            )
+        from ..core.candidates import (
+            BM25Candidates, DualEncoderCandidates, HybridRetriever,
+        )
+
+        if args.first_stage == "de":
+            generator = DualEncoderCandidates(
+                ce.q_emb, ce.i_emb, n_valid=index.n_items
+            )
+        else:
+            from ..data.synthetic import lexical_signatures
+
+            generator = BM25Candidates(
+                lexical_signatures(ce.i_emb, seed=3),
+                lexical_signatures(ce.q_emb, seed=3),
+                n_valid=index.n_items,
+            )
+        shortlist = min(4 * cfg.budget_ce, index.n_items)
+        retriever = HybridRetriever(
+            score_fn=score_fn, generator=generator, cfg=cfg, index=index,
+            shortlist_k=shortlist, mode="mask",
+        )
+        print(f"first stage: {args.first_stage} shortlist_k={shortlist} "
+              f"(CE budget restricted to each query's candidates)")
+    else:
+        retriever = make_retriever(args.retriever, index, score_fn, cfg)
     candidate_fn = None
     if args.retriever == "rerank":
         # stand-in first-stage retriever: dual-encoder dot-product order

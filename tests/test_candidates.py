@@ -1,0 +1,330 @@
+"""Multi-stage hybrid retrieval: first-stage generators + candidate-subset
+engine search (repro.core.candidates).
+
+The load-bearing contract is **subset == masked, bitwise**: searching a
+gathered sub-index under ``pos_map`` must produce exactly the numbers the
+full-corpus engine produces under the candidate-union ``eligible`` mask —
+same noise realization (the blocked noise field is evaluated at the
+original corpus coordinates), same tie-breaks (the sorted-ascending
+position map preserves ascending-id order), same dequantization (int8
+subset columns keep their codes and carry per-column source-tile scales).
+Plus: varying candidate sets never retrace, first-stage spend is measured,
+and the engine's CE accounting is untouched by candidate restriction.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AdaCURConfig
+from repro.core.candidates import (
+    BM25Candidates,
+    CandidateGenerator,
+    DualEncoderCandidates,
+    HybridRetriever,
+    OracleCandidates,
+    candidate_eligibility,
+    union_candidates,
+)
+from repro.core.engine import engine_search
+from repro.core.index import AnchorIndex
+from repro.core.scorer import TabulatedScorer
+from repro.data.synthetic import (
+    lexical_signatures,
+    make_synthetic_ce,
+    make_zeshel_like,
+)
+from repro.kernels.approx_topk import quant
+
+N_ANCHOR_Q, N_TEST_Q, N_ITEMS = 48, 6, 384  # k_q=48 >= every k_anchor here
+
+
+@pytest.fixture(scope="module")
+def dom():
+    ce = make_synthetic_ce(
+        jax.random.PRNGKey(0), n_queries=N_ANCHOR_Q + N_TEST_Q,
+        n_items=N_ITEMS,
+    )
+    m = np.asarray(ce.full_matrix(jnp.arange(N_ANCHOR_Q + N_TEST_Q)))
+    noisy = jnp.asarray(m) + 1.2 * jax.random.normal(
+        jax.random.PRNGKey(9), m.shape
+    )
+    return {
+        "ce": ce,
+        "m": m,
+        "r_anc": jnp.asarray(m[:N_ANCHOR_Q]),
+        "test_q": jnp.arange(N_ANCHOR_Q, N_ANCHOR_Q + N_TEST_Q),
+        "exact": jnp.asarray(m[N_ANCHOR_Q:]),
+        # imperfect first stage: noisy-exact candidate ordering per query
+        "cand_order": jax.lax.top_k(noisy, N_ITEMS)[1],
+    }
+
+
+class TestGenerators:
+    def test_dual_encoder_matches_exact_dot_topk(self, dom):
+        ce = dom["ce"]
+        de = DualEncoderCandidates(ce.q_emb, ce.i_emb, tile=128)
+        assert isinstance(de, CandidateGenerator)
+        got = de(dom["test_q"], 16)
+        ref = jax.lax.top_k(ce.q_emb[dom["test_q"]] @ ce.i_emb.T, 16)[1]
+        assert np.array_equal(np.asarray(got), np.asarray(ref))
+        assert de.stats.requests == 1
+        assert de.stats.candidates == N_TEST_Q * 16
+
+    def test_oracle_is_exact_topk(self, dom):
+        orc = OracleCandidates(dom["exact"])
+        got = orc(jnp.arange(N_TEST_Q), 8)
+        ref = jax.lax.top_k(dom["exact"], 8)[1]
+        assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+    def test_bm25_deterministic_counted_and_finds_gold(self):
+        ds = make_zeshel_like(0, n_items=256, n_queries=24)
+        bm = BM25Candidates(ds.item_tokens, ds.query_tokens)
+        q = jnp.arange(12)
+        a = np.asarray(bm(q, 10))
+        # runtime-counted through jit, like TabulatedScorer
+        b = np.asarray(jax.jit(lambda qq: bm(qq, 10))(q))
+        jax.effects_barrier()
+        assert np.array_equal(a, b)
+        assert bm.stats.requests == 2 and bm.stats.candidates == 240
+        # token overlap with the gold description must rank it highly
+        hit = np.mean([ds.gold[i] in a[i] for i in range(12)])
+        assert hit >= 0.75, f"BM25 gold-in-10 rate {hit}"
+
+    def test_bm25_over_lexicalized_embeddings(self, dom):
+        ce = dom["ce"]
+        bm = BM25Candidates(
+            lexical_signatures(ce.i_emb, seed=3),
+            lexical_signatures(ce.q_emb, seed=3),
+        )
+        cand = np.asarray(bm(dom["test_q"], 32))
+        # LSH tokens: cosine-similar rows share terms, so the DE top-1 item
+        # should usually appear in the BM25 shortlist
+        de_top = np.asarray(
+            jax.lax.top_k(ce.q_emb[dom["test_q"]] @ ce.i_emb.T, 1)[1]
+        )[:, 0]
+        hit = np.mean([de_top[i] in cand[i] for i in range(N_TEST_Q)])
+        assert hit >= 0.5, f"lexicalized BM25 missed DE-top1 too often ({hit})"
+
+
+class TestUnionAndSubset:
+    def test_union_sorted_padded_deduped(self):
+        cand = jnp.array([[3, 1, 1, 100], [7, 3, 2, 200]])
+        pos, valid, n_sub = union_candidates(cand, 8, 256)
+        assert list(np.asarray(pos)) == [1, 2, 3, 7, 100, 200, 0, 0]
+        assert int(n_sub) == 6
+        assert list(np.asarray(valid)) == [True] * 6 + [False] * 2
+
+    def test_union_drops_out_of_corpus_positions(self):
+        cand = jnp.array([[3, 1, 256, 300]])
+        pos, valid, n_sub = union_candidates(cand, 4, 256)
+        assert int(n_sub) == 2
+        assert list(np.asarray(pos))[:2] == [1, 3]
+
+    def test_eligibility_scatter(self):
+        cand = jnp.array([[3, 1], [7, 300]])
+        el = candidate_eligibility(cand, 256, per_query=True)
+        assert el.shape == (2, 256)
+        assert bool(el[0, 1]) and bool(el[0, 3]) and not bool(el[0, 7])
+        assert bool(el[1, 7]) and int(el.sum()) == 3  # 300 dropped
+        un = candidate_eligibility(cand, 256, per_query=False)
+        assert int(un.sum()) == 3
+
+    def test_subset_columns_int8_bitwise_dequant(self, dom):
+        """Gathered int8 columns keep their codes and source-tile scales:
+        dequantizing the subset payload reproduces the full payload's
+        dequantization at those columns EXACTLY."""
+        payload = quant.as_payload(dom["r_anc"], "int8", tile=64)
+        pos = jnp.array([0, 5, 63, 64, 130, 383], jnp.int32)
+        valid = jnp.array([True] * 5 + [False])
+        sub = quant.subset_columns(payload, pos, valid)
+        assert sub.tile == 1 and sub.codes.shape == (N_ANCHOR_Q, 6)
+        full_deq = np.asarray(quant.dequantize(payload))
+        sub_deq = np.asarray(quant.dequantize(sub))
+        assert np.array_equal(sub_deq[:, :5], full_deq[:, np.asarray(pos)[:5]])
+        assert np.all(sub_deq[:, 5] == 0.0)  # padded column exactly zero
+
+    def test_subset_columns_fp32(self, dom):
+        pos = jnp.array([2, 9, 100], jnp.int32)
+        valid = jnp.array([True, True, False])
+        sub = np.asarray(quant.subset_columns(dom["r_anc"], pos, valid))
+        assert np.array_equal(sub[:, :2], np.asarray(dom["r_anc"])[:, [2, 9]])
+        assert np.all(sub[:, 2] == 0.0)
+
+
+SUBSET_CONFIGS = [
+    ("unrolled", "topk", "float32", False),
+    ("fori", "topk", "int8", False),
+    ("fori", "softmax", "float32", True),
+    ("early", "random", "int8", True),
+    ("early", "topk", "float32", True),
+    ("fori", "random", "float32", False),
+]
+
+
+class TestSubsetVsMaskedBitParity:
+    @pytest.mark.parametrize("mode,strat,payload,fused", SUBSET_CONFIGS)
+    def test_subset_equals_masked(self, dom, mode, strat, payload, fused):
+        """engine_search over the gathered sub-index (pos_map) is bitwise
+        equal to the full-corpus search under the candidate-union eligible
+        mask — same top-k ids/scores, same anchors, same rounds."""
+        cfg = AdaCURConfig(
+            k_anchor=16, n_rounds=4, budget_ce=40, k_retrieve=10,
+            strategy=strat, payload_dtype=payload, payload_tile=64,
+            use_fused_topk=fused, fused_tile=128,
+            loop_mode="unrolled" if mode == "unrolled" else "fori",
+            early_exit_tol=0.4 if mode == "early" else 0.0,
+        )
+        payload_op = quant.as_payload(dom["r_anc"], payload, 64)
+        cand = dom["cand_order"][N_ANCHOR_Q:, :64]
+        capacity = 256
+        pos, valid, n_sub = union_candidates(cand, capacity, N_ITEMS)
+        sub = quant.subset_columns(payload_op, pos, valid)
+        sub_ids = jnp.where(valid, pos, -1)
+        key = jax.random.PRNGKey(21)
+        kw = {} if mode == "unrolled" else dict(
+            n_rounds=jnp.asarray(cfg.n_rounds, jnp.int32)
+        )
+        rs = engine_search(
+            TabulatedScorer(dom["m"]), sub, dom["test_q"], cfg, key,
+            n_valid_items=n_sub, item_ids=sub_ids, pos_map=pos,
+            return_scores=False, **kw,
+        )
+        elig = candidate_eligibility(cand, N_ITEMS, per_query=False)
+        rm = engine_search(
+            TabulatedScorer(dom["m"]), payload_op, dom["test_q"], cfg, key,
+            eligible=elig, return_scores=False, **kw,
+        )
+        pos_np = np.asarray(pos)
+        assert np.array_equal(pos_np[np.asarray(rs.topk_idx)],
+                              np.asarray(rm.topk_idx))
+        assert np.array_equal(np.asarray(rs.topk_scores),
+                              np.asarray(rm.topk_scores))
+        a_s, a_m = np.asarray(rs.anchor_idx), np.asarray(rm.anchor_idx)
+        assert np.array_equal(np.where(a_s >= 0, pos_np[a_s], -1),
+                              np.where(a_m >= 0, a_m, -1))
+        assert np.array_equal(np.asarray(rs.anchor_scores),
+                              np.asarray(rm.anchor_scores))
+        assert int(rs.rounds_done) == int(rm.rounds_done)
+
+
+class TestHybridRetriever:
+    def _cfg(self, **kw):
+        base = dict(k_anchor=16, n_rounds=4, budget_ce=40, k_retrieve=10,
+                    strategy="topk", loop_mode="fori")
+        base.update(kw)
+        return AdaCURConfig(**base)
+
+    def test_validation(self, dom):
+        orc = OracleCandidates(jnp.asarray(dom["m"]))
+        with pytest.raises(ValueError, match="shortlist_k"):
+            HybridRetriever(score_fn=TabulatedScorer(dom["m"]), generator=orc,
+                            cfg=self._cfg(), r_anc=dom["r_anc"],
+                            shortlist_k=8)
+        with pytest.raises(ValueError, match="unknown mode"):
+            HybridRetriever(score_fn=TabulatedScorer(dom["m"]), generator=orc,
+                            cfg=self._cfg(), r_anc=dom["r_anc"],
+                            shortlist_k=64, mode="nope")
+
+    @pytest.mark.parametrize("mode", ["subset", "mask"])
+    def test_retrieved_subset_of_candidates(self, dom, mode):
+        orc = OracleCandidates(jnp.asarray(dom["m"]))
+        hyb = HybridRetriever(
+            score_fn=TabulatedScorer(dom["m"]), generator=orc,
+            cfg=self._cfg(), r_anc=dom["r_anc"], shortlist_k=64, mode=mode,
+        )
+        res = hyb.search(dom["test_q"], jax.random.PRNGKey(5))
+        cand = np.asarray(orc(dom["test_q"], 64))
+        union = set(cand.ravel().tolist())
+        for r, row in enumerate(np.asarray(res.topk_idx)):
+            allowed = union if mode == "subset" else set(cand[r].tolist())
+            assert set(int(i) for i in row) <= allowed, f"row {r} leaked"
+
+    def test_zero_retrace_across_candidate_sets(self, dom):
+        """Different query batches propose different candidate sets; the
+        union/gather/search pipeline stays ONE compiled executable."""
+        orc = OracleCandidates(jnp.asarray(dom["m"]))
+        hyb = HybridRetriever(
+            score_fn=TabulatedScorer(dom["m"]), generator=orc,
+            cfg=self._cfg(), r_anc=dom["r_anc"], shortlist_k=64,
+        )
+        hyb.search(jnp.arange(N_TEST_Q), jax.random.PRNGKey(0))
+        sizes = [hyb._run._cache_size()]
+        for lo in (6, 17, 30):
+            hyb.search(jnp.arange(lo, lo + N_TEST_Q), jax.random.PRNGKey(lo))
+            sizes.append(hyb._run._cache_size())
+        assert sizes == [1, 1, 1, 1], f"retraced: {sizes}"
+
+    def test_measured_equals_planned_and_first_stage_is_free(self, dom):
+        scorer = TabulatedScorer(dom["m"])
+        orc = OracleCandidates(jnp.asarray(dom["m"]))
+        hyb = HybridRetriever(
+            score_fn=scorer, generator=orc, cfg=self._cfg(),
+            r_anc=dom["r_anc"], shortlist_k=64,
+        )
+        jax.block_until_ready(hyb.search(dom["test_q"], jax.random.PRNGKey(2)))
+        jax.effects_barrier()
+        assert scorer.stats.ce_calls == hyb.ce_call_plan() * N_TEST_Q
+        assert orc.stats.candidates == N_TEST_Q * 64  # generator spend: 0 CE
+
+    def test_no_pair_scored_twice_under_first_stage(self, dom):
+        scorer = TabulatedScorer(dom["m"], record_pairs=True)
+        orc = OracleCandidates(jnp.asarray(dom["m"]))
+        hyb = HybridRetriever(
+            score_fn=scorer, generator=orc, cfg=self._cfg(),
+            r_anc=dom["r_anc"], shortlist_k=64, mode="mask",
+        )
+        jax.block_until_ready(hyb.search(dom["test_q"], jax.random.PRNGKey(4)))
+        jax.effects_barrier()
+        rows = {}
+        for qids, idx in scorer.call_log:
+            for r in range(idx.shape[0]):
+                rows.setdefault(r, []).extend(
+                    (int(qids[r]), int(i)) for i in idx[r]
+                )
+        for r, pairs in rows.items():
+            assert len(pairs) == len(set(pairs)), f"row {r}: pair scored twice"
+
+    def test_index_backed_subset_maps_item_ids(self, dom):
+        """Over a padded AnchorIndex, subset results come back in corpus
+        positions whose external ids the index resolves — identical to the
+        masked index-backed search."""
+        index = AnchorIndex.from_r_anc(
+            dom["m"][:N_ANCHOR_Q], capacity=N_ITEMS + 128
+        )
+        orc = OracleCandidates(jnp.asarray(dom["m"]), n_valid=N_ITEMS)
+        cfg = self._cfg()
+        hyb = HybridRetriever(
+            score_fn=TabulatedScorer(dom["m"]), generator=orc, cfg=cfg,
+            index=index, shortlist_k=64,
+        )
+        res = hyb.search(dom["test_q"], jax.random.PRNGKey(6))
+        ids = np.asarray(index.gather_item_ids(res.topk_idx))
+        assert (ids >= 0).all() and (ids < N_ITEMS).all()
+        # parity with the masked search over the same index
+        hyb_m = HybridRetriever(
+            score_fn=TabulatedScorer(dom["m"]), generator=orc, cfg=cfg,
+            index=index, shortlist_k=64, mode="mask",
+        )
+        cand = orc(dom["test_q"], 64)
+        elig = candidate_eligibility(cand, index.capacity, per_query=False)
+        ref = hyb_m._run(
+            index.r_anc, dom["test_q"], jax.random.PRNGKey(6),
+            eligible=elig, item_ids=index.item_ids, n_valid=index.n_valid,
+        )
+        assert np.array_equal(np.asarray(res.topk_idx), np.asarray(ref.topk_idx))
+        assert np.array_equal(
+            np.asarray(res.topk_scores), np.asarray(ref.topk_scores)
+        )
+
+    def test_sharded_engine_rejects_pos_map(self, dom):
+        from repro.core.engine import make_sharded_engine
+
+        mesh = jax.make_mesh((1,), ("items",))
+        srun = make_sharded_engine(
+            TabulatedScorer(dom["m"]), self._cfg(), mesh
+        )
+        with pytest.raises(ValueError, match="single-shard"):
+            srun(dom["r_anc"], dom["test_q"], jax.random.PRNGKey(0),
+                 pos_map=jnp.arange(N_ITEMS))

@@ -9,7 +9,10 @@ shim runs the same strategies offline):
     TabulatedScorer's call log;
 (c) total measured CE calls per query equal ``ce_call_plan(cfg, rounds)``
     exactly, under every engine mode (unrolled / fori with runtime round
-    overrides / early-exit) — the budget is measured, not assumed.
+    overrides / early-exit) — the budget is measured, not assumed;
+(d) (b) and (c) hold verbatim under a first-stage candidate restriction
+    (HybridRetriever subset/mask), and nothing outside the candidate set
+    is ever CE-scored or retrieved.
 """
 
 import jax
@@ -190,6 +193,56 @@ class TestScoredPairInvariants:
             assert len(pairs) == len(set(pairs)), f"row {r}: pair scored twice"
         planned = ce_call_plan(cfg, int(res.rounds_done)) * N_TEST_Q
         assert scorer.stats.ce_calls == planned
+
+    @_settings(max_examples=6)
+    @given(
+        hyb_mode=st.sampled_from(["subset", "mask"]),
+        loop=st.sampled_from(["unrolled", "fori"]),
+        payload=st.sampled_from(["float32", "int8"]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_first_stage_preserves_engine_invariants(self, dom, hyb_mode,
+                                                     loop, payload, seed):
+        """(b) + (c) survive a first stage: restricting the engine to a
+        candidate shortlist (gathered subset or eligible mask) changes
+        *which* items get scored, never the dedup bookkeeping or the
+        budget — measured == planned verbatim, no pair scored twice, and
+        nothing outside the candidates is ever retrieved."""
+        from repro.core.candidates import HybridRetriever, OracleCandidates
+
+        cfg = AdaCURConfig(
+            k_anchor=16, n_rounds=4, budget_ce=32, k_retrieve=8,
+            payload_dtype=payload, payload_tile=64, loop_mode=loop,
+        )
+        scorer = TabulatedScorer(dom["m"], record_pairs=True)
+        orc = OracleCandidates(jnp.asarray(dom["m"]))
+        hyb = HybridRetriever(
+            score_fn=scorer, generator=orc, cfg=cfg, r_anc=dom["r_anc"],
+            shortlist_k=64, mode=hyb_mode,
+        )
+        res = jax.block_until_ready(
+            hyb.search(dom["test_q"], jax.random.PRNGKey(seed))
+        )
+        jax.effects_barrier()
+
+        rows = _pair_sets_per_row(scorer.call_log)
+        assert len(rows) == N_TEST_Q
+        for r, pairs in rows.items():
+            assert len(pairs) == len(set(pairs)), f"row {r}: pair scored twice"
+        planned = ce_call_plan(cfg, int(res.rounds_done)) * N_TEST_Q
+        assert scorer.stats.ce_calls == planned, (
+            f"measured {scorer.stats.ce_calls} != planned {planned} under "
+            f"first stage (mode={hyb_mode})"
+        )
+        # every CE-scored item and every retrieved item is a candidate
+        cand = np.asarray(orc(dom["test_q"], 64))
+        union = set(cand.ravel().tolist())
+        for r, pairs in rows.items():
+            allowed = union if hyb_mode == "subset" else set(cand[r].tolist())
+            scored = {i for _, i in pairs}
+            assert scored <= allowed, f"row {r}: CE scored a non-candidate"
+            retrieved = set(int(i) for i in np.asarray(res.topk_idx)[r])
+            assert retrieved <= allowed, f"row {r}: retrieved a non-candidate"
 
     @_settings(max_examples=4)
     @given(

@@ -1,0 +1,97 @@
+"""IR metrics + harness (repro.eval): hand-computed values, the
+single-ground-truth evaluate_result contract, and the compat re-export."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.eval import metrics
+from repro.eval.harness import MethodReport
+
+
+class TestIRMetrics:
+    def test_hand_computed_example(self):
+        # q0: rel {2, 5}; ranked [2, 9, 5] -> r@1=.5, r@3=1, mrr=1,
+        #     ndcg@3 = (1 + 1/log2(4)) / (1 + 1/log2(3)) = 1.5/1.6309...
+        # q1: rel {7};    ranked [0, 1, 7] -> r@1=0, r@3=1, mrr=1/3,
+        #     ndcg@3 = (1/log2(4)) / 1 = .5
+        ranked = np.array([[2, 9, 5], [0, 1, 7]])
+        qrels = [{2, 5}, {7}]
+        out = metrics.ir_metrics(ranked, qrels, ks=(1, 3))
+        assert out["recall@1"] == pytest.approx(0.25)
+        assert out["recall@3"] == pytest.approx(1.0)
+        assert out["mrr@1"] == pytest.approx(0.5)
+        assert out["mrr@3"] == pytest.approx((1.0 + 1.0 / 3.0) / 2.0)
+        ndcg0 = (1.0 + 1.0 / np.log2(4.0)) / (1.0 + 1.0 / np.log2(3.0))
+        assert out["ndcg@3"] == pytest.approx((ndcg0 + 0.5) / 2.0)
+
+    def test_graded_gains_and_duplicates(self):
+        # graded qrels: gain 3 for doc 1, gain 1 for doc 0; a duplicate of
+        # doc 1 later in the row must not count twice
+        qrels = [{1: 3.0, 0: 1.0}]
+        ranked = np.array([[1, 1, 0]])
+        out = metrics.ir_metrics(ranked, qrels, ks=(3,))
+        ideal = 3.0 + 1.0 / np.log2(3.0)
+        got = 3.0 + 1.0 / np.log2(4.0)          # doc 0 at position 3
+        assert out["ndcg@3"] == pytest.approx(got / ideal)
+        assert out["recall@3"] == pytest.approx(1.0)
+
+    def test_rows_with_empty_qrels_are_skipped(self):
+        ranked = np.array([[0, 1], [1, 0]])
+        out = metrics.ir_metrics(ranked, [set(), {1}], ks=(1,))
+        assert out["recall@1"] == pytest.approx(1.0)
+        with pytest.raises(ValueError):
+            metrics.ir_metrics(ranked, [set(), set()], ks=(1,))
+
+    def test_qrels_builders(self):
+        exact = jnp.asarray([[0.1, 0.9, 0.2], [0.8, 0.0, 0.3]])
+        assert metrics.qrels_from_exact(exact, k=1) == [
+            frozenset({1}), frozenset({0})
+        ]
+        assert metrics.qrels_from_gold([2, 0]) == [
+            frozenset({2}), frozenset({0})
+        ]
+
+
+class TestEvaluateResult:
+    def test_single_ground_truth_matches_per_k(self):
+        """evaluate_result computes ground truth ONCE at max(ks); every
+        recall@k must still equal the direct per-k computation."""
+        key = jax.random.PRNGKey(3)
+        exact = jax.random.normal(key, (7, 120))
+        retrieved = jax.lax.top_k(
+            exact + 0.5 * jax.random.normal(jax.random.PRNGKey(4), exact.shape),
+            32,
+        )[1]
+
+        class _Res:
+            topk_idx = retrieved
+            ce_calls = 32
+
+        rep = metrics.evaluate_result("m", _Res(), exact, ks=(1, 5, 32))
+        for k in (1, 5, 32):
+            _, gt_k = metrics.exact_topk(exact, k)
+            assert rep.recall[k] == pytest.approx(
+                float(metrics.topk_recall(retrieved, gt_k, k))
+            )
+
+    def test_core_retrieval_reexports_same_objects(self):
+        from repro.core import retrieval
+
+        assert retrieval.topk_recall is metrics.topk_recall
+        assert retrieval.evaluate_result is metrics.evaluate_result
+        assert retrieval.exact_topk is metrics.exact_topk
+        assert retrieval.RecallReport is metrics.RecallReport
+
+
+def test_method_report_json_roundtrips():
+    rep = MethodReport(
+        method="m", planned_ce=10, measured_ce=10, budget_matched=True,
+        topk_recall={1: 0.5, 10: 0.9}, ir={"recall@1": 0.5},
+        wall_us_per_query=12.0,
+    )
+    import json
+
+    d = json.loads(json.dumps(rep.to_json()))
+    assert d["topk_recall"]["10"] == 0.9 and d["budget_matched"] is True

@@ -22,7 +22,9 @@ tests/test_multidevice.py <name>``):
   mesh: bit-identical top-k vs the single-device engine across loop modes
   x payload dtypes x a mutated padded-capacity index; the property-suite
   invariants (no pair CE-scored twice, measured == planned calls) under a
-  2x2 mesh; zero retraces across runtime n_rounds; and a golden snapshot
+  2x2 mesh; zero retraces across runtime n_rounds; first-stage candidate
+  restriction (a per-query ``eligible`` mask sharded over the mesh ==
+  the single-device masked engine, bit-identical); and a golden snapshot
   (tests/golden/engine_sharded.json, regenerate with GOLDEN_REGEN=1).
 """
 
@@ -485,6 +487,73 @@ def check_engine_spmd_invariants():
     assert len(traces) == n0, f"runtime n_rounds retraced: {len(traces)} vs {n0}"
 
 
+def check_engine_spmd_eligible():
+    """First-stage candidate restriction under the SPMD engine: a per-query
+    ``eligible`` mask sharded over the (data x items) mesh produces BIT-
+    IDENTICAL results to the single-device masked engine, every returned
+    item is a candidate, and measured CE calls still equal the plan."""
+    import jax, jax.numpy as jnp, numpy as np
+
+    from repro.configs.base import AdaCURConfig
+    from repro.core.candidates import candidate_eligibility
+    from repro.core.engine import ce_call_plan, make_engine, make_sharded_engine
+    from repro.core.scorer import TabulatedScorer
+
+    m, r_anc, test_q = _engine_domain()
+    n_items = r_anc.shape[1]
+    n_tq = int(test_q.shape[0])
+    mesh = jax.make_mesh((2, 2), ("data", "items"))
+    key = jax.random.PRNGKey(13)
+
+    # imperfect first stage: noisy exact top-96 per query
+    noisy = jnp.asarray(m)[test_q] + 1.5 * jax.random.normal(
+        jax.random.PRNGKey(3), (n_tq, n_items)
+    )
+    cand = jax.lax.top_k(noisy, 96)[1]
+    eligible = candidate_eligibility(cand, n_items, per_query=True)
+
+    for strat, payload in [("topk", "float32"), ("random", "int8")]:
+        cfg = AdaCURConfig(
+            k_anchor=16, n_rounds=4, budget_ce=32, k_retrieve=8,
+            strategy=strat, use_fused_topk=True, fused_tile=128,
+            loop_mode="fori", payload_dtype=payload, payload_tile=128,
+        )
+        ref = make_engine(TabulatedScorer(m), cfg)(
+            r_anc, test_q, key, eligible=eligible
+        )
+        scorer = TabulatedScorer(m)
+        run = make_sharded_engine(scorer, cfg, mesh)
+        res = jax.block_until_ready(
+            run(r_anc, test_q, key, eligible=eligible)
+        )
+        for f in ("topk_idx", "topk_scores", "anchor_idx", "anchor_scores"):
+            assert np.array_equal(
+                np.asarray(getattr(res, f)), np.asarray(getattr(ref, f))
+            ), (strat, payload, f)
+        cand_sets = [set(int(i) for i in row) for row in np.asarray(cand)]
+        for r, row in enumerate(np.asarray(res.topk_idx)):
+            assert set(int(i) for i in row) <= cand_sets[r], (
+                f"row {r} returned non-candidates ({strat}, {payload})"
+            )
+        planned = ce_call_plan(cfg, int(res.rounds_done)) * n_tq
+        assert scorer.stats.ce_calls == planned, (
+            scorer.stats.ce_calls, planned, strat, payload
+        )
+
+    # a (N,) batch-union mask shards over the items axis only
+    union = candidate_eligibility(cand, n_items, per_query=False)
+    cfg = AdaCURConfig(
+        k_anchor=16, n_rounds=4, budget_ce=32, k_retrieve=8,
+        use_fused_topk=True, fused_tile=128, loop_mode="fori",
+    )
+    ref = make_engine(TabulatedScorer(m), cfg)(r_anc, test_q, key, eligible=union)
+    res = make_sharded_engine(TabulatedScorer(m), cfg, mesh)(
+        r_anc, test_q, key, eligible=union
+    )
+    assert np.array_equal(np.asarray(res.topk_idx), np.asarray(ref.topk_idx))
+    assert np.array_equal(np.asarray(res.topk_scores), np.asarray(ref.topk_scores))
+
+
 def check_engine_spmd_golden():
     """Golden regression for one sharded engine config: catches cross-shard
     merge-order / collective regressions by tolerance compare against a
@@ -543,6 +612,7 @@ CHECKS = {
     "engine_spmd_parity": check_engine_spmd_parity,
     "engine_spmd_mutated_index": check_engine_spmd_mutated_index,
     "engine_spmd_invariants": check_engine_spmd_invariants,
+    "engine_spmd_eligible": check_engine_spmd_eligible,
     "engine_spmd_golden": check_engine_spmd_golden,
 }
 
