@@ -11,7 +11,11 @@ against the single-device engine at 1/2/4/8 forced host devices:
   the served corpus grows with the mesh;
 - **exactness**: the sharded top-k must equal the single-device top-k
   BIT-FOR-BIT (ids and scores) — recall is identical by construction, and
-  this bench asserts it on every configuration it runs.
+  this bench asserts it on every configuration it runs;
+- **device-resident real CE**: pairs/s per shard through the in-mesh
+  transformer forward (DeviceCEScorer — the ``--mesh`` + ``real-ce``
+  serving path), asserting measured CE calls == ce_call_plan on every
+  timed execution.
 
 jax locks the device count at backend init, so the aggregator re-executes
 this file as a worker subprocess per device count
@@ -107,10 +111,59 @@ def _worker(args) -> None:
             "topk_scores_equal": score_equal,
         }
 
+    def bench_real_ce() -> dict:
+        """Device-resident CE stage: pairs/s through the in-mesh transformer
+        forward (the --mesh + real-ce path), with measured == planned
+        accounting across every timed execution."""
+        from repro.configs.base import replace as cfg_replace
+        from repro.configs.registry import CE_TINY
+        from repro.core.engine import ce_call_plan
+        from repro.core.scorer import DeviceCEScorer
+        from repro.data.synthetic import make_zeshel_like
+        from repro.models import cross_encoder
+
+        n_items = 128 * n_dev          # one NOISE_BLOCK slab per item shard
+        ds = make_zeshel_like(0, n_items=n_items, n_queries=48 + args.batch,
+                              item_len=12, query_len=8)
+        lm_cfg = cfg_replace(
+            CE_TINY, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+            head_dim=16, d_ff=128, vocab_size=ds.vocab_size, dtype="float32",
+            remat=False,
+        )
+        params, _ = cross_encoder.init_cross_encoder(
+            jax.random.PRNGKey(0), lm_cfg
+        )
+        scorer = DeviceCEScorer(
+            params, lm_cfg,
+            query_token_fn=lambda q: np.asarray(ds.query_tokens)[q],
+            item_tokens=ds.item_tokens, attn_impl="ref",
+        )
+        cfg = AdaCURConfig(k_anchor=16, n_rounds=args.rounds, budget_ce=32,
+                           k_retrieve=16, loop_mode="fori")
+        r_anc = jax.random.normal(jax.random.PRNGKey(1), (24, n_items))
+        q_tok = scorer.tokenize_queries(jnp.arange(48, 48 + args.batch))
+        run = make_sharded_engine(scorer, cfg, mesh)
+        _, us = timed(run, r_anc, q_tok, jax.random.PRNGKey(7),
+                      n_iter=args.iters, warmup=1)
+        pairs = ce_call_plan(cfg) * args.batch
+        pairs_per_s = pairs / (us / 1e6)
+        return {
+            "n_items": n_items,
+            "pairs_per_search": pairs,
+            "pairs_per_s": pairs_per_s,
+            "pairs_per_s_per_shard": pairs_per_s / n_dev,
+            # every timed execution (warmup included) counted exactly once,
+            # item-shard pad rows excluded
+            "measured_equals_planned": bool(
+                scorer.stats.ce_calls == pairs * (args.iters + 1)
+            ),
+        }
+
     out = {
         "n_devices": n_dev,
         "fixed_n": bench_one(args.n_items),
         "weak_scaling": bench_one(args.n_per_shard * n_dev),
+        "real_ce": bench_real_ce(),
     }
     print("BENCH_JSON " + json.dumps(out))
 
@@ -154,11 +207,14 @@ def main() -> None:
         line = [l for l in proc.stdout.splitlines() if l.startswith("BENCH_JSON ")]
         per_dev[str(n_dev)] = json.loads(line[-1][len("BENCH_JSON "):])
         f = per_dev[str(n_dev)]["fixed_n"]
+        ce = per_dev[str(n_dev)]["real_ce"]
         print(f"devices={n_dev}: per-shard payload "
               f"{f['payload_bytes_per_shard']/1e6:.2f} MB "
               f"(ideal {f['payload_bytes_total']/n_dev/1e6:.2f}), "
               f"per-round {f['per_round_ms']:.1f} ms, "
-              f"exact={f['topk_idx_equal'] and f['topk_scores_equal']}")
+              f"exact={f['topk_idx_equal'] and f['topk_scores_equal']}, "
+              f"real-CE {ce['pairs_per_s_per_shard']:.0f} pairs/s/shard "
+              f"(measured==planned: {ce['measured_equals_planned']})")
 
     snap = {
         "config": {"n_items": args.n_items, "n_per_shard": args.n_per_shard,
@@ -170,15 +226,22 @@ def main() -> None:
     # --- assertions: the acceptance criteria ------------------------------
     worst_ratio = 0.0
     all_exact = True
+    ce_measured_ok = True
+    ce_min_rate = float("inf")
     for n_dev, rec in per_dev.items():
         for sweep in ("fixed_n", "weak_scaling"):
             r = rec[sweep]
             ideal = r["payload_bytes_total"] / int(n_dev)
             worst_ratio = max(worst_ratio, r["payload_bytes_per_shard"] / ideal)
             all_exact = all_exact and r["topk_idx_equal"] and r["topk_scores_equal"]
+        ce = rec["real_ce"]
+        ce_measured_ok = ce_measured_ok and ce["measured_equals_planned"]
+        ce_min_rate = min(ce_min_rate, ce["pairs_per_s_per_shard"])
     snap["assertions"] = {
         "per_shard_payload_over_ideal_max": worst_ratio,
         "sharded_equals_dense_exactly": all_exact,
+        "real_ce_measured_equals_planned": ce_measured_ok,
+        "real_ce_min_pairs_per_s_per_shard": ce_min_rate,
     }
     with open("BENCH_sharded.json", "w") as f:
         json.dump(snap, f, indent=1)
@@ -187,6 +250,10 @@ def main() -> None:
         f"per-shard payload bytes {worst_ratio:.3f}x ideal N/shards split"
     )
     assert all_exact, "sharded engine diverged from the single-device engine"
+    assert ce_measured_ok, (
+        "device-resident CE measured calls diverged from ce_call_plan"
+    )
+    assert ce_min_rate > 0, "real-CE throughput not recorded"
     print("wrote BENCH_sharded.json")
 
 

@@ -274,6 +274,65 @@ def _score_once(
     return _psum_items(ctx, c)
 
 
+def _gather_token_rows(ctx: ShardCtx, table: jax.Array, gidx: jax.Array) -> jax.Array:
+    """Corpus token rows for GLOBAL item positions -> (..., Li) int32.
+
+    The token-table analogue of :func:`_map_item_ids`: each item shard
+    gathers the rows it owns from its local (N_local, Li) slab, zeros
+    elsewhere, one psum broadcast."""
+    if ctx.item_axes is None:
+        return jnp.take(table, gidx, axis=0)
+    local = gidx - _item_offset(ctx)
+    owned = (local >= 0) & (local < ctx.n_local)
+    rows = jnp.take(table, jnp.clip(local, 0, ctx.n_local - 1), axis=0)
+    return _psum_items(ctx, jnp.where(owned[..., None], rows, 0))
+
+
+def _device_ce_score(
+    ctx: ShardCtx, scorer, q_tokens, gidx: jax.Array, item_tokens: jax.Array
+) -> jax.Array:
+    """Device-resident CE scoring of a (B, k) position batch, in-trace.
+
+    Replaces the shard-0 host-callback path for scorers with
+    ``device_resident=True`` (:class:`~repro.core.scorer.DeviceCEScorer`):
+    gather the selected items' token rows, assemble ``[CLS] q [SEP] i
+    [SEP]`` pairs, and run the CE transformer forward inside the caller's
+    trace — under the mesh the flattened pair batch is split across the
+    *item* shards (each scores an equal contiguous chunk, all_gather
+    reassembles), so the CE FLOPs parallelize over the whole mesh while
+    every pair is still scored exactly once system-wide.  Measured
+    accounting rides a numpy-only callback on item shard 0 (mesh-legal: no
+    nested device launch), with the item-shard pad rows excluded.
+    """
+    rows = _gather_token_rows(ctx, item_tokens, gidx)          # (B, k, Li)
+    pairs = scorer.build_pairs(q_tokens, rows)                 # (B, k, Lb)
+    b, k, lb = pairs.shape
+    n = b * k
+    flat = pairs.reshape(n, lb)
+    if ctx.item_axes is None:
+        scores = scorer.forward(flat)
+        dummy = scorer.count(gidx, 0)
+    else:
+        n_pad = -n % ctx.n_item_shards
+        if n_pad:
+            flat = jnp.concatenate(
+                [flat, jnp.full((n_pad, lb), scorer.pad_id, flat.dtype)], axis=0
+            )
+        chunk = (n + n_pad) // ctx.n_item_shards
+        local = jax.lax.dynamic_slice_in_dim(flat, ctx.item_shard * chunk, chunk, 0)
+        s = scorer.forward(local).astype(jnp.float32)
+        scores = jax.lax.all_gather(s, ctx.item_axes, axis=0, tiled=True)[:n]
+        # one counting callback per data shard; gidx as operand keeps the
+        # per-round calls distinct (CSE-proof), the consumed 0.0 keeps it live
+        dummy = jax.lax.cond(
+            ctx.item_shard == 0,
+            lambda g: scorer.count(g, n_pad),
+            lambda g: jnp.float32(0.0),
+            gidx,
+        )
+    return scores.reshape(b, k).astype(jnp.float32) + 0.0 * dummy
+
+
 def _global_frac(ctx: ShardCtx, hit: jax.Array) -> jax.Array:
     """Batch-mean of a boolean (B_local, m) statistic over the GLOBAL batch
     (the early-exit monitor must stop every shard on the same round).
@@ -509,6 +568,7 @@ def engine_search(
     item_ids: Optional[jax.Array] = None,
     eligible: Optional[jax.Array] = None,
     pos_map: Optional[jax.Array] = None,
+    item_tokens: Optional[jax.Array] = None,
     _ctx: Optional[ShardCtx] = None,
 ) -> AdaCURResult:
     """Run Algorithm 1 (+ retrieval) through the static-shape round engine.
@@ -555,6 +615,15 @@ def engine_search(
     (ascending order preserves the ascending-id tie-break contract).
     Result indices stay in engine-local (subset) coordinates; callers remap
     through ``pos_map`` (as :class:`HybridRetriever` does).
+
+    Device-resident scorers (``score_fn.device_resident``, e.g.
+    :class:`~repro.core.scorer.DeviceCEScorer`) score *in-trace* instead of
+    through a host callback: ``query`` is then the (B, Lq) query token
+    batch and ``item_tokens`` the (N, Li) corpus token table
+    (position-indexed, like the payload — ``item_ids`` never applies), from
+    which pair rows are gathered and the CE forward runs inside the engine
+    program (:func:`_device_ce_score`).  Defaults to the scorer's own
+    ``item_tokens`` table when the operand is omitted.
 
     ``_ctx`` is the shard context when this call is the per-shard body of
     the SPMD engine (:func:`make_sharded_engine`); ``r_anc``/``item_ids``
@@ -630,8 +699,28 @@ def engine_search(
         b = jax.tree_util.tree_leaves(query)[0].shape[0]
 
     # the score-once wrapper: positions -> external ids -> exactly one CE
-    # call per pair system-wide (item shard 0 scores, psum broadcasts)
-    if sharded:
+    # call per pair system-wide (item shard 0 scores, psum broadcasts) —
+    # or, for device-resident scorers, positions -> token rows -> the CE
+    # forward in-trace, split across the item shards
+    if getattr(score_fn, "device_resident", False):
+        if item_tokens is None:
+            item_tokens = getattr(score_fn, "item_tokens", None)
+        if item_tokens is None:
+            raise ValueError(
+                "a device-resident scorer needs the corpus token table: pass "
+                "item_tokens= (carried by AnchorIndex.with_item_tokens) or "
+                "construct the scorer with one"
+            )
+        if item_tokens.shape[0] != n_items:
+            raise ValueError(
+                f"item_tokens rows ({item_tokens.shape[0]}) must match the "
+                f"payload's item capacity ({n_items}); the token table is "
+                f"position-indexed alongside r_anc"
+            )
+
+        def scored(q, gidx, _tok=item_tokens):
+            return _device_ce_score(ctx, score_fn, q, gidx, _tok)
+    elif sharded:
         score_dtype = jax.eval_shape(
             lambda q, i: score_fn(q, i),
             query, jax.ShapeDtypeStruct((b, k_s), jnp.int32),
@@ -799,20 +888,22 @@ def make_engine(
         raise ValueError("jit_compile=False requires loop_mode='unrolled'")
 
     def _run(r_anc, query, key, n_rounds, first_anchors=None, batch=None,
-             n_valid=None, item_ids=None, eligible=None, pos_map=None):
+             n_valid=None, item_ids=None, eligible=None, pos_map=None,
+             item_tokens=None):
         return engine_search(
             score_fn, r_anc, query, cfg, key,
             first_anchors=first_anchors, batch=batch,
             n_valid_items=n_valid if n_valid is not None else n_valid_items,
             n_rounds=n_rounds, return_scores=return_scores, item_ids=item_ids,
-            eligible=eligible, pos_map=pos_map,
+            eligible=eligible, pos_map=pos_map, item_tokens=item_tokens,
         )
 
     if jit_compile:
         _run = partial(jax.jit, static_argnames=("batch",))(_run)
 
     def run(r_anc, query, key, first_anchors=None, batch=None, n_rounds=None,
-            n_valid=None, item_ids=None, eligible=None, pos_map=None):
+            n_valid=None, item_ids=None, eligible=None, pos_map=None,
+            item_tokens=None):
         if cfg.loop_mode == "fori":
             n_rounds = jnp.asarray(
                 cfg.n_rounds if n_rounds is None else n_rounds, jnp.int32
@@ -822,7 +913,7 @@ def make_engine(
         if n_valid is not None:
             n_valid = jnp.asarray(n_valid, jnp.int32)
         return _run(r_anc, query, key, n_rounds, first_anchors, batch,
-                    n_valid, item_ids, eligible, pos_map)
+                    n_valid, item_ids, eligible, pos_map, item_tokens)
 
     return run
 
@@ -875,18 +966,32 @@ def make_sharded_engine(
     this); and every per-shard candidate list (``k_s``, the rerank budget,
     ``k_retrieve``) fits in one shard's slab.
 
-    Scorer constraint: host-callback scorers are supported (the callback
-    fires on item shard 0 only), but the callback must stay NUMPY-ONLY —
-    ``TabulatedScorer`` and ``CachingScorer`` over it are safe.  A callback
-    that launches a nested device computation (``CrossEncoderScorer``'s
-    jitted transformer forward) deadlocks a single-process multi-device
-    runtime: the nested launch contends with the other shards parked at
-    the score-broadcast psum rendezvous.  Serve a real CE behind a host
-    boundary (its own process/devices) instead.
+    Scorer constraint: the real cross-encoder runs as a *device-resident
+    stage* of this program — pass a scorer with ``device_resident=True``
+    (:class:`~repro.core.scorer.DeviceCEScorer`) plus the corpus token
+    table (``item_tokens=``, carried by ``AnchorIndex.with_item_tokens``),
+    and each round's pair assembly + transformer forward happen in-trace,
+    split across the item shards, with no host round-trip.  Host-callback
+    scorers remain acceptable when the callback is NUMPY-ONLY —
+    ``TabulatedScorer`` (and ``CachingScorer`` over it) fire on item shard
+    0 and psum-broadcast, which is exactly right for matrix lookups and
+    tests.  What is *rejected* (at construction, via the scorer's
+    ``nested_device_callback`` capability flag) is a host callback that
+    launches nested device compute — ``CrossEncoderScorer``'s jitted
+    forward deadlocks a single-process multi-device runtime, the nested
+    launch contending with shards parked at the score-broadcast psum.
     """
     if not jit_compile:
         raise ValueError("the sharded engine is a compiled SPMD program; "
                          "jit_compile=False is only available unsharded")
+    if getattr(score_fn, "nested_device_callback", False):
+        raise ValueError(
+            "this scorer's host callback launches nested device compute (a "
+            "jitted CE forward) and would deadlock the SPMD program's psum "
+            "rendezvous; under a mesh run the real CE device-resident "
+            "(DeviceCEScorer + an index token table) — numpy-only callback "
+            "scorers (TabulatedScorer, CachingScorer over it) stay supported"
+        )
     item_axes = (item_axes,) if isinstance(item_axes, str) else tuple(item_axes)
     if data_axes is None:
         data_axes = tuple(
@@ -933,7 +1038,7 @@ def make_sharded_engine(
         return n_local
 
     def core(r_anc, query, key, n_rounds, n_valid, item_ids, first_anchors,
-             eligible):
+             eligible, item_tokens):
         n_local = r_anc.shape[1]
         b_local = jax.tree_util.tree_leaves(query)[0].shape[0]
         ctx = ShardCtx(
@@ -949,7 +1054,7 @@ def make_sharded_engine(
             first_anchors=first_anchors,
             n_valid_items=n_valid, n_rounds=n_rounds,
             return_scores=False, item_ids=item_ids, eligible=eligible,
-            _ctx=ctx,
+            item_tokens=item_tokens, _ctx=ctx,
         )
         return (res.anchor_idx, res.anchor_scores, res.topk_idx,
                 res.topk_scores, res.rounds_done)
@@ -957,7 +1062,8 @@ def make_sharded_engine(
     compiled = {}          # (has_first, query treedef/ranks) -> jitted fn
 
     def run(r_anc, query, key, first_anchors=None, batch=None, n_rounds=None,
-            n_valid=None, item_ids=None, eligible=None, pos_map=None):
+            n_valid=None, item_ids=None, eligible=None, pos_map=None,
+            item_tokens=None):
         if pos_map is not None:
             raise ValueError(
                 "pos_map (candidate-subset search) is single-shard only; "
@@ -988,6 +1094,26 @@ def make_sharded_engine(
         n_valid = jnp.asarray(n_valid, jnp.int32)
         if item_ids is None:
             item_ids = jnp.arange(capacity, dtype=jnp.int32)
+        if getattr(score_fn, "device_resident", False):
+            if item_tokens is None:
+                item_tokens = getattr(score_fn, "item_tokens", None)
+            if item_tokens is None:
+                raise ValueError(
+                    "a device-resident scorer needs the corpus token table "
+                    "under the mesh: pass item_tokens= (carried by "
+                    "AnchorIndex.with_item_tokens) or construct the scorer "
+                    "with one"
+                )
+            item_tokens = jnp.asarray(item_tokens, jnp.int32)
+            if item_tokens.shape[0] != capacity:
+                raise ValueError(
+                    f"item_tokens rows ({item_tokens.shape[0]}) must match "
+                    f"the payload capacity ({capacity}); the token table is "
+                    f"position-aligned with r_anc (AnchorIndex keeps them in "
+                    f"lockstep through mutation)"
+                )
+        else:
+            item_tokens = None
         query_specs = jax.tree.map(
             lambda leaf: P(data_axes, *([None] * (jnp.ndim(leaf) - 1)))
             if data_axes else P(),
@@ -1001,6 +1127,7 @@ def make_sharded_engine(
             tuple(jnp.ndim(l) for l in jax.tree_util.tree_leaves(query)),
             quant.payload_dtype_of(r_anc),
             None if eligible is None else eligible.ndim,
+            item_tokens is not None,
         )
         if sig not in compiled:
             if eligible is None:
@@ -1018,15 +1145,16 @@ def make_sharded_engine(
                 P(item_axes),                         # item_ids
                 data_spec if first_anchors is not None else None,
                 eligible_spec,                        # eligible
+                P(item_axes, None) if item_tokens is not None else None,
             )
             out_specs = (data_spec, data_spec, data_spec, data_spec, P())
 
             live_specs = tuple(s for s in in_specs if s is not None)
 
             def entry(r_anc, query, key, n_rounds, n_valid, item_ids,
-                      first_anchors, eligible):
+                      first_anchors, eligible, item_tokens):
                 args = (r_anc, query, key, n_rounds, n_valid, item_ids,
-                        first_anchors, eligible)
+                        first_anchors, eligible, item_tokens)
                 live = tuple(a for a, s in zip(args, in_specs) if s is not None)
 
                 def body(*live_args):
@@ -1044,7 +1172,7 @@ def make_sharded_engine(
             compiled[sig] = jax.jit(entry, static_argnums=())
         anchor_idx, c_test, top_idx, top_s, rounds_done = compiled[sig](
             r_anc, query, key, n_rounds, n_valid, item_ids, first_anchors,
-            eligible,
+            eligible, item_tokens,
         )
         return AdaCURResult(
             anchor_idx, c_test, None, top_idx, top_s,
@@ -1132,6 +1260,13 @@ class _IndexBacked:
             new = new.shard(mesh)
         self.index = new
 
+    def _prep_query(self, query):
+        """Device-resident scorers take token operands: map a (B,) query-id
+        batch through the scorer's host tokenizer (once, before the round
+        loop); every other scorer passes the query through untouched."""
+        tok = getattr(self.score_fn, "tokenize_queries", None)
+        return query if tok is None else tok(query)
+
     def _search_operands(self):
         if self.index is None:
             return self.r_anc, {}
@@ -1144,6 +1279,11 @@ class _IndexBacked:
                 self._dynamic_valid = self.index.capacity > self.index.n_items
         if self._dynamic_valid:
             kw["n_valid"] = self.index.n_valid
+        if (getattr(self.score_fn, "device_resident", False)
+                and getattr(self.index, "item_tokens", None) is not None):
+            # the index's table is authoritative: position-aligned with the
+            # payload through every mutation (the scorer's own copy is not)
+            kw["item_tokens"] = self.index.item_tokens
         return self.index.r_anc, kw
 
 
@@ -1179,6 +1319,7 @@ class AdaCURRetriever(_IndexBacked):
     def search(self, query, key=None, first_anchors=None, batch=None,
                n_rounds=None, **_ignored):
         key = jax.random.PRNGKey(0) if key is None else key
+        query = self._prep_query(query)
         r_anc, kw = self._search_operands()
         return self._run(
             r_anc, query, key, first_anchors=first_anchors, batch=batch,
@@ -1248,6 +1389,7 @@ class ANNCURRetriever(_IndexBacked):
 
     def search(self, query, key=None, **kw):
         key = jax.random.PRNGKey(0) if key is None else key
+        query = self._prep_query(query)
         anchors = (
             self.index.anchor_item_pos
             if self.anchor_idx is None else self.anchor_idx
@@ -1306,6 +1448,7 @@ class RerankRetriever(_IndexBacked):
         if candidate_idx is None:
             raise ValueError("RerankRetriever.search needs candidate_idx (B, >=budget)")
         key = jax.random.PRNGKey(0) if key is None else key
+        query = self._prep_query(query)
         first = candidate_idx[:, : self.budget_ce].astype(jnp.int32)
         r_anc, opkw = self._search_operands()
         return self._run(r_anc, query, key, first_anchors=first, **opkw)

@@ -55,11 +55,14 @@ from . import cur
 BulkScoreFn = Callable[[jax.Array, jax.Array], jax.Array]
 
 # v2 adds the quantized payload (r_codes/r_scales leaves + payload meta).
-# Saves stamp v2 only when the payload is actually quantized — a plain fp32
-# index keeps the v1 on-disk layout byte-for-byte, so pre-v2 readers still
-# load it; this build reads both.
-INDEX_FORMAT_VERSION = 2
-_READABLE_FORMAT_VERSIONS = (1, 2)
+# v3 adds the optional corpus token table (item_tokens leaf) that makes the
+# index self-contained for device-resident CE scoring (DeviceCEScorer under
+# the SPMD engine).  Saves stamp the LOWEST version whose features they use
+# — a plain fp32 index keeps the v1 on-disk layout byte-for-byte, a
+# quantized one without tokens stamps v2 — so older readers keep loading
+# everything they can represent; this build reads all three.
+INDEX_FORMAT_VERSION = 3
+_READABLE_FORMAT_VERSIONS = (1, 2, 3)
 _META_FILE = "index_meta.json"
 _CKPT_STEP = 0
 
@@ -167,7 +170,7 @@ def _pad_axis(x: jax.Array, axis: int, target: int, fill) -> jax.Array:
     jax.tree_util.register_dataclass,
     data_fields=(
         "r_anc", "anchor_query_ids", "item_ids", "n_valid",
-        "anchor_item_pos", "u", "item_embeddings",
+        "anchor_item_pos", "u", "item_embeddings", "item_tokens",
     ),
     meta_fields=(),
 )
@@ -192,6 +195,10 @@ class AnchorIndex:
     anchor_item_pos: Optional[jax.Array] = None  # (k_i,) anchor item positions
     u: Optional[jax.Array] = None                # (k_i, k_q) pinv(R_anc[:, I_anc])
     item_embeddings: Optional[jax.Array] = None  # (k_i, capacity) = U @ R_anc
+    # optional corpus token table for device-resident CE scoring: row j holds
+    # the (valid-first, fixed-length) item tokens of position j — kept in
+    # positional lockstep with r_anc through every mutation
+    item_tokens: Optional[jax.Array] = None      # (capacity, item_len) int32
 
     # ---- shape/metadata accessors -----------------------------------------
 
@@ -330,6 +337,29 @@ class AnchorIndex:
         )
         return idx.quantize(payload_dtype, tile=payload_tile)
 
+    def with_item_tokens(self, item_tokens) -> "AnchorIndex":
+        """Attach the corpus token table (device-resident CE scoring).
+
+        ``item_tokens`` is (n_valid, item_len) or (capacity, item_len) int32
+        — row ``j`` tokenizes the item at *position* ``j`` (valid-first,
+        fixed length, trailing pad).  The table is padded to capacity with
+        pad rows (token 0) and from then on moves in positional lockstep
+        with the payload through ``add_items``/``remove_items``/``shard``,
+        so a :class:`~repro.core.scorer.DeviceCEScorer` can gather pair
+        rows by engine position at any point in the index lifecycle."""
+        item_tokens = jnp.asarray(item_tokens, jnp.int32)
+        if item_tokens.ndim != 2:
+            raise ValueError(f"item_tokens must be (n, item_len); got {item_tokens.shape}")
+        n = item_tokens.shape[0]
+        if n not in (self.n_items, self.capacity):
+            raise ValueError(
+                f"item_tokens rows ({n}) must cover the valid items "
+                f"({self.n_items}) or the full capacity ({self.capacity})"
+            )
+        return dataclasses.replace(
+            self, item_tokens=_pad_axis(item_tokens, 0, self.capacity, 0)
+        )
+
     def with_capacity(self, capacity: int) -> "AnchorIndex":
         """Re-pad the item axis (must still hold all ``n_valid`` items).
 
@@ -344,12 +374,16 @@ class AnchorIndex:
         else:
             r_anc = _pad_axis(self.r_anc[:, :n], 1, capacity, 0)
         emb = self.item_embeddings
+        tok = self.item_tokens
         return dataclasses.replace(
             self,
             r_anc=r_anc,
             item_ids=_pad_axis(self.item_ids[:n], 0, capacity, -1),
             item_embeddings=(
                 None if emb is None else _pad_axis(emb[:, :n], 1, capacity, 0)
+            ),
+            item_tokens=(
+                None if tok is None else _pad_axis(tok[:n], 0, capacity, 0)
             ),
         )
 
@@ -405,11 +439,14 @@ class AnchorIndex:
         new_item_ids: jax.Array,
         cols: Optional[jax.Array] = None,
         bulk_score_fn: Optional[BulkScoreFn] = None,
+        new_tokens: Optional[jax.Array] = None,
     ) -> "AnchorIndex":
         """Append items into the padded tail.  ``cols`` is the (k_q, n_new)
         exact score block (computed via ``bulk_score_fn`` when omitted);
         latent item embeddings extend incrementally (``U`` is unchanged —
-        the anchor columns are untouched).  Host-side offline op."""
+        the anchor columns are untouched).  An index carrying a token table
+        requires ``new_tokens`` (n_new, item_len) so the table stays aligned
+        with the payload.  Host-side offline op."""
         new_item_ids = jnp.asarray(new_item_ids, jnp.int32)
         n_new = int(new_item_ids.shape[0])
         n0 = self.n_items
@@ -432,6 +469,25 @@ class AnchorIndex:
         cols = jnp.asarray(cols, jnp.float32)
         if cols.shape != (self.k_q, n_new):
             raise ValueError(f"cols {cols.shape} != ({self.k_q}, {n_new})")
+        tok = self.item_tokens
+        if tok is not None:
+            if new_tokens is None:
+                raise ValueError(
+                    "this index carries a token table (with_item_tokens); "
+                    "add_items needs new_tokens (n_new, item_len) to keep it "
+                    "position-aligned with the payload"
+                )
+            new_tokens = jnp.asarray(new_tokens, jnp.int32)
+            if new_tokens.shape != (n_new, tok.shape[1]):
+                raise ValueError(
+                    f"new_tokens {new_tokens.shape} != ({n_new}, {tok.shape[1]})"
+                )
+            tok = jax.lax.dynamic_update_slice(tok, new_tokens, (n0, 0))
+        elif new_tokens is not None:
+            raise ValueError(
+                "new_tokens given but the index carries no token table; "
+                "attach one first (with_item_tokens)"
+            )
         if self._quantized:
             # re-quantize only the tiles the new column range touches
             r_anc = quant.update_columns(self.r_anc, cols, n0)
@@ -451,6 +507,7 @@ class AnchorIndex:
                     emb, (self.u @ cols).astype(emb.dtype), (0, n0)
                 )
             ),
+            item_tokens=tok,
         )
 
     def remove_items(self, remove_item_ids: jax.Array) -> "AnchorIndex":
@@ -481,6 +538,7 @@ class AnchorIndex:
         else:
             r_anc = jnp.where(keep[None, :], self.r_anc[:, perm], 0)
         emb = self.item_embeddings
+        tok = self.item_tokens
         new = dataclasses.replace(
             self,
             r_anc=r_anc,
@@ -488,6 +546,9 @@ class AnchorIndex:
             n_valid=jnp.asarray(n1, jnp.int32),
             item_embeddings=(
                 None if emb is None else jnp.where(keep[None, :], emb[:, perm], 0)
+            ),
+            item_tokens=(
+                None if tok is None else jnp.where(keep[:, None], tok[perm], 0)
             ),
         )
         if self.anchor_item_pos is not None:
@@ -514,6 +575,8 @@ class AnchorIndex:
             t["anchor_item_pos"] = self.anchor_item_pos
         if self.has_latents:
             t.update(u=self.u, item_embeddings=self.item_embeddings)
+        if self.item_tokens is not None:
+            t["item_tokens"] = self.item_tokens
         return t
 
     def save(self, path: str) -> None:
@@ -541,12 +604,20 @@ class AnchorIndex:
             "anchor_item_pos": P(),
             "u": P(),
             "item_embeddings": P(None, "data"),
+            "item_tokens": P("data", None),
         }
         specs = {k: leaf_spec(v, defaults[k]) for k, v in tree.items()}
         ck = Checkpointer(path, async_save=False)
         ck.save(_CKPT_STEP, tree, specs)
+        # stamp the lowest version whose on-disk features this index uses
+        if self.item_tokens is not None:
+            version = 3
+        elif self._quantized:
+            version = 2
+        else:
+            version = 1
         meta = {
-            "format_version": INDEX_FORMAT_VERSION if self._quantized else 1,
+            "format_version": version,
             "k_q": self.k_q,
             "capacity": self.capacity,
             "n_items": self.n_items,
@@ -640,6 +711,7 @@ class AnchorIndex:
         else:
             r_anc = put(idx.r_anc, P(None, axes))
         emb = idx.item_embeddings
+        tok = idx.item_tokens
         out = dataclasses.replace(
             idx,
             r_anc=r_anc,
@@ -647,6 +719,7 @@ class AnchorIndex:
             item_ids=put(idx.item_ids, P(axes)),
             n_valid=put(idx.n_valid, P()),
             item_embeddings=None if emb is None else put(emb, P(None, axes)),
+            item_tokens=None if tok is None else put(tok, P(axes, None)),
         )
         if idx.anchor_item_pos is not None:
             out = dataclasses.replace(

@@ -16,7 +16,23 @@ with *measured* CE-call accounting.  Three production providers:
   bucketing and micro-batch padding to a *small static shape set* (repeated
   calls never retrace), scored through the Pallas flash-attention kernel
   whose per-example SMEM valid-length masks make one padded bucket serve
-  every pair length.
+  every pair length;
+- :class:`DeviceCEScorer` — the same transformer CE as a *device-resident*
+  stage of the engine's program.  The corpus token table lives on device
+  (carried by ``AnchorIndex.item_tokens``), queries are tokenized on the
+  host once per batch, and pair assembly + the CE forward happen *in-trace*
+  — so the SPMD ``shard_map`` engine runs the real CE with no host
+  callback, no nested jit, and no psum rendezvous to deadlock.
+
+Capability flags the engine keys on (duck-typed, no imports needed):
+
+- ``device_resident`` — the scorer scores token operands in-trace and needs
+  the corpus token table (``item_tokens``) instead of item *ids*;
+- ``nested_device_callback`` — the scorer's host callback launches device
+  compute (a nested jit).  Safe single-device; **rejected** by
+  ``make_sharded_engine`` because it deadlocks a single-process
+  multi-device runtime.  Numpy-only callbacks (TabulatedScorer,
+  CachingScorer over one) stay mesh-legal.
 
 Layered on top, :class:`CachingScorer` adds a (query_id, item_id) score
 cache: scores computed for one request's anchors are exactly the R_anc
@@ -84,6 +100,25 @@ def scorer_stats(score_fn) -> Optional[ScorerStats]:
     """The live stats of a ScoreFn if it is a Scorer, else None."""
     s = getattr(score_fn, "stats", None)
     return s if isinstance(s, ScorerStats) else None
+
+
+def bucket_for(length: int, len_buckets: Tuple[int, ...], what: str = "pair") -> int:
+    """Smallest bucket >= length, validated *eagerly* with an actionable error.
+
+    Called at tokenization/enqueue time (host scorers) and at trace time
+    (device scorers) so an oversized pair fails as a plain ``ValueError``
+    where it was caused — never as an opaque XLA runtime error surfacing
+    from inside ``jax.pure_callback``.
+    """
+    for b in len_buckets:
+        if b >= length:
+            return b
+    raise ValueError(
+        f"{what} length {length} exceeds the largest length bucket "
+        f"{max(len_buckets)} (len_buckets={tuple(len_buckets)}); extend "
+        f"len_buckets to cover it, or shorten the query/item token budget "
+        f"so tokenized pairs fit an existing bucket"
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -183,7 +218,20 @@ class CrossEncoderScorer(_HostScorer):
     ``len(len_buckets)`` static shapes — ``n_traces`` proves repeated calls
     never retrace.  Attention runs through the Pallas flash kernel with
     per-example SMEM valid lengths (``attn_impl='flash'``).
+
+    Pair lengths are validated *eagerly*: at construction the ``pair_fn``
+    is probed with a one-pair dummy call, so a pair that overflows the
+    largest length bucket raises an actionable ``ValueError`` immediately
+    instead of an opaque XLA error from inside ``jax.pure_callback`` on
+    the first search (set ``probe_pair_len=False`` for pair_fns that
+    cannot tokenize id 0; lengths are then validated per enqueue).
     """
+
+    # host callback launches a nested jit (the CE forward): deadlocks the
+    # SPMD mesh (see make_sharded_engine) and, on a single-core host, the
+    # async CPU client's one execute thread — run with
+    # ``jax_cpu_enable_async_dispatch=False`` there, or use DeviceCEScorer
+    nested_device_callback = True
 
     def __init__(
         self,
@@ -197,6 +245,7 @@ class CrossEncoderScorer(_HostScorer):
         flash_block: Tuple[int, int] = (128, 128),
         flash_interpret: bool = True,
         record_pairs: bool = False,
+        probe_pair_len: bool = True,
     ):
         super().__init__(record_pairs)
         from ..models import cross_encoder
@@ -208,6 +257,16 @@ class CrossEncoderScorer(_HostScorer):
         self.micro_batch = micro_batch
         self.len_buckets = tuple(sorted(len_buckets))
         self._n_traces = 0
+
+        if probe_pair_len:
+            try:
+                probe = np.asarray(
+                    pair_fn(np.zeros(1, np.int64), np.zeros((1, 1), np.int64))
+                )
+            except Exception:
+                probe = None     # pair_fn rejects the dummy ids; validate per call
+            if probe is not None:
+                bucket_for(int(probe.shape[-1]), self.len_buckets)
 
         def scored(tokens):
             self._n_traces += 1          # trace-time side effect
@@ -224,13 +283,7 @@ class CrossEncoderScorer(_HostScorer):
         return self._n_traces
 
     def _bucket(self, length: int) -> int:
-        for b in self.len_buckets:
-            if b >= length:
-                return b
-        raise ValueError(
-            f"pair length {length} exceeds the largest bucket "
-            f"{self.len_buckets[-1]}; extend len_buckets"
-        )
+        return bucket_for(length, self.len_buckets)
 
     def _host(self, qids, idx):
         b, k = idx.shape
@@ -247,6 +300,160 @@ class CrossEncoderScorer(_HostScorer):
             chunk = jnp.asarray(flat[lo : lo + self.micro_batch])
             out[lo : lo + self.micro_batch] = np.asarray(self._jit_scored(chunk))
         return out[:n].reshape(b, k)
+
+
+class DeviceCEScorer:
+    """The real transformer CE as a *device-resident* stage of the engine.
+
+    Where :class:`CrossEncoderScorer` tokenizes and launches the CE from a
+    host callback (illegal under the SPMD mesh — the nested jit deadlocks
+    against shards parked at the score-broadcast psum), this provider keeps
+    the corpus token table on device, assembles ``[CLS] q [SEP] i [SEP]``
+    pair rows *in-trace* and runs the transformer forward (flash-attention
+    path with per-example valid-length masks) inside the engine's one
+    compiled program.  Under ``make_sharded_engine`` the flattened pair
+    batch is additionally split across the *item* shards, so the whole
+    mesh shares the CE FLOPs and every pair is scored exactly once
+    system-wide.
+
+    The query operand the engine sees is the ``(B, query_len)`` int32 token
+    batch from :meth:`tokenize_queries` (host-side, once per request batch,
+    before the round loop).  The corpus table is either carried by the
+    scorer (``item_tokens=``) or — the production path — by the index
+    (``AnchorIndex.with_item_tokens``), position-aligned with the payload
+    through every mutation.
+
+    Accounting stays *measured*: a numpy-only counting callback (no device
+    compute, mesh-legal) observes each executed scoring round, so
+    ``stats.ce_calls`` equals :func:`repro.core.engine.ce_call_plan` at
+    runtime and item-shard pad rows are excluded by construction.
+    """
+
+    device_resident = True
+
+    def __init__(
+        self,
+        params,
+        cfg: LMConfig,
+        query_token_fn: Callable[[np.ndarray], np.ndarray],
+        item_tokens=None,
+        pad_id: int = 0,
+        cls_id: int = 1,
+        sep_id: int = 2,
+        len_buckets: Tuple[int, ...] = (32, 64, 128, 256, 512),
+        attn_impl: str = "flash",
+        flash_block: Tuple[int, int] = (128, 128),
+        flash_interpret: bool = True,
+        record_pairs: bool = False,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.query_token_fn = query_token_fn
+        self.item_tokens = (
+            None if item_tokens is None else jnp.asarray(item_tokens, jnp.int32)
+        )
+        self.pad_id = pad_id
+        self.cls_id = cls_id
+        self.sep_id = sep_id
+        self.len_buckets = tuple(sorted(len_buckets))
+        self.attn_impl = attn_impl
+        self.flash_block = flash_block
+        self.flash_interpret = flash_interpret
+        self.record_pairs = record_pairs
+        self.stats = ScorerStats()
+        self.call_log: List[np.ndarray] = []
+        self._n_traces = 0
+
+    # -- host side: once per request batch, before the round loop ----------
+
+    def tokenize_queries(self, query) -> jax.Array:
+        """Query ids -> (B, query_len) int32 token rows (the engine operand).
+
+        Pair lengths are validated *here* (eagerly, with an actionable
+        message) whenever the scorer carries its own token table; when the
+        table rides on the index instead, :meth:`build_pairs` re-validates
+        at trace time — still a plain ``ValueError``, never an XLA error.
+        """
+        qids = np.asarray(jax.device_get(query))
+        toks = np.asarray(self.query_token_fn(qids), dtype=np.int32)
+        if toks.ndim != 2 or toks.shape[0] != qids.shape[0]:
+            raise ValueError(
+                f"query_token_fn must map (B,) ids to (B, query_len) tokens; "
+                f"got {toks.shape} for B={qids.shape[0]}"
+            )
+        if self.item_tokens is not None:
+            bucket_for(
+                toks.shape[1] + int(self.item_tokens.shape[1]) + 3,
+                self.len_buckets,
+            )
+        return jnp.asarray(toks)
+
+    # -- device side: traced into the engine program -----------------------
+
+    def build_pairs(self, q_tokens, item_rows) -> jax.Array:
+        """(B, Lq) x (B, k, Li) -> (B, k, bucket) padded pair token rows."""
+        from ..models import cross_encoder
+
+        lq, li = int(q_tokens.shape[-1]), int(item_rows.shape[-1])
+        bucket = bucket_for(lq + li + 3, self.len_buckets)
+        return cross_encoder.build_pair_tokens(
+            q_tokens, item_rows, pad_to=bucket,
+            cls_id=self.cls_id, sep_id=self.sep_id, pad_id=self.pad_id,
+        )
+
+    def forward(self, flat_tokens) -> jax.Array:
+        """(M, bucket) pair rows -> (M,) CE scores, in the caller's trace."""
+        from ..models import cross_encoder
+
+        self._n_traces += 1              # trace-time side effect
+        return cross_encoder.score_tokens(
+            self.params, flat_tokens, self.cfg, pad_id=self.pad_id,
+            attn_impl=self.attn_impl, flash_block=self.flash_block,
+            flash_interpret=self.flash_interpret,
+        )
+
+    # -- measured accounting (numpy-only callback: mesh-legal) -------------
+
+    def _count_host(self, idx, n_pad):
+        idx = np.asarray(idx)
+        self.stats.requests += 1
+        self.stats.pairs += int(idx.size)
+        self.stats.ce_calls += int(idx.size)
+        self.stats.batch_pad += int(n_pad)
+        if self.record_pairs:
+            self.call_log.append(idx.copy())
+        return np.float32(0.0)
+
+    def count(self, item_idx, n_pad) -> jax.Array:
+        """Record one executed scoring round; returns a 0.0 the caller must
+        consume (``scores + 0.0 * count(...)``) so DCE cannot drop it."""
+        return jax.pure_callback(
+            self._count_host,
+            jax.ShapeDtypeStruct((), jnp.float32),
+            item_idx, jnp.asarray(n_pad, jnp.int32),
+        )
+
+    @property
+    def n_traces(self) -> int:
+        """CE forwards traced so far (stable across runtime n_rounds/n_valid)."""
+        return self._n_traces
+
+    def reset_stats(self) -> None:
+        self.stats = ScorerStats()
+        self.call_log = []
+
+    def __call__(self, query_tokens, item_idx) -> jax.Array:
+        """Plain ScoreFn over the scorer-carried table (single device)."""
+        if self.item_tokens is None:
+            raise ValueError(
+                "DeviceCEScorer needs a corpus token table to score directly: "
+                "construct it with item_tokens=, or search through an index "
+                "that carries one (AnchorIndex.with_item_tokens)"
+            )
+        from .engine import _device_ce_score, _local_ctx
+
+        ctx = _local_ctx(int(self.item_tokens.shape[0]))
+        return _device_ce_score(ctx, self, query_tokens, item_idx, self.item_tokens)
 
 
 class CachingScorer(_HostScorer):
@@ -276,6 +483,11 @@ class CachingScorer(_HostScorer):
         self.inner = inner
         self.capacity = capacity
         self._cache: "OrderedDict[int, float]" = OrderedDict()
+
+    @property
+    def nested_device_callback(self) -> bool:
+        """Mesh legality follows the wrapped scorer (cache adds no device work)."""
+        return bool(getattr(self.inner, "nested_device_callback", False))
 
     def reset_stats(self, clear_cache: bool = False) -> None:
         super().reset_stats()

@@ -40,9 +40,13 @@ over 8 devices' "items" axis, request batches data-parallel over "data", and
 the FULL multi-round engine runs as one shard_map program (bit-identical to
 single-device serving).  The device count must match — on a CPU host export
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first.  ``--mesh``
-composes with the synthetic/tabulated/cached scorers but NOT with
-``--scorer real-ce`` (nested-jit host callback; see
-``engine.make_sharded_engine``).
+composes with every scorer: synthetic/tabulated/cached ones run as before,
+and ``--scorer real-ce`` serves through the *device-resident* CE stage —
+the corpus token table rides on the index (``AnchorIndex.with_item_tokens``)
+and the transformer forward runs inside the shard_map program, split across
+the item shards (see ``engine.make_sharded_engine``).  The one exclusion is
+``--cache`` under a real-CE mesh: the pair cache intercepts host callbacks,
+and the device-resident CE never leaves the device.
 """
 
 from __future__ import annotations
@@ -333,19 +337,19 @@ def main() -> None:
 
     from ..data.synthetic import make_synthetic_ce
 
+    if (args.scorer == "real-ce" and not args.mesh
+            and len(os.sched_getaffinity(0)) < 2):
+        # single-core host: the async CPU client has one execute thread, so
+        # the host CE callback's nested jit would self-block (the
+        # single-device twin of the mesh deadlock). Must be set before the
+        # first jax computation instantiates the client.
+        jax.config.update("jax_cpu_enable_async_dispatch", False)
+
     if args.scorer == "real-ce":
-        if args.mesh:
-            # the CE scorer's host callback launches a NESTED jit (the
-            # transformer forward); under a single-process multi-device
-            # runtime that nested launch deadlocks against the other
-            # shards' psum rendezvous.  Numpy-only callbacks (tabulated /
-            # cached scorers) are safe — the real CE needs its own devices
-            # (a scoring service), which single-process --mesh cannot give.
-            raise SystemExit(
-                "--mesh is not supported with --scorer real-ce: the CE "
-                "scorer's nested-jit host callback deadlocks a single-"
-                "process multi-device runtime (see make_sharded_engine docs)"
-            )
+        # with --mesh the CE runs device-resident inside the shard_map
+        # program (DeviceCEScorer + the index token table); capability
+        # detection lives in make_sharded_engine, which rejects any scorer
+        # whose host callback would launch nested device compute
         _serve_real_ce(args)
         return
 
@@ -499,12 +503,21 @@ def _drive(svc: AdaCURService, args, cfg: AdaCURConfig,
 def _serve_real_ce(args) -> None:
     """End-to-end serving with the REAL transformer cross-encoder: offline
     index built by the bulk CE path, online scoring through the bucketed
-    flash-attention CrossEncoderScorer (+ optional pair cache)."""
+    flash-attention CrossEncoderScorer (+ optional pair cache) — or, under
+    ``--mesh``, through the device-resident DeviceCEScorer stage of the
+    SPMD engine (the index carries the corpus token table)."""
     from ..configs.base import replace as cfg_replace
     from ..configs.registry import CE_TINY
-    from ..core.scorer import CachingScorer, CrossEncoderScorer
+    from ..core.scorer import CachingScorer, CrossEncoderScorer, DeviceCEScorer
     from ..data.synthetic import make_zeshel_like
     from ..models import cross_encoder
+
+    if args.mesh and args.cache:
+        raise SystemExit(
+            "--cache intercepts host-callback scorers; under --mesh the real "
+            "CE scores device-resident inside the shard_map program and its "
+            "pairs never cross the host boundary — drop --cache"
+        )
 
     n_items = min(args.n_items, 500)       # CE-scored corpus: keep CPU-friendly
     n_anchor_q, n_serve_q = 100, 100
@@ -539,14 +552,33 @@ def _serve_real_ce(args) -> None:
         strategy="topk", k_retrieve=50, loop_mode="fori",
         use_fused_topk=args.fused, payload_dtype=args.payload_dtype,
     )
-    retriever = make_retriever(args.retriever, index, scorer, cfg)
+    if args.mesh:
+        # device-resident CE: the token table rides on the index (sharded
+        # over the items axis with the payload) and the serving scorer
+        # assembles + scores pairs inside the SPMD program
+        serve_scorer = DeviceCEScorer(
+            params, lm_cfg,
+            query_token_fn=lambda q: np.asarray(ds.query_tokens)[q],
+            flash_block=(64, 64),
+        )
+        index = index.with_item_tokens(ds.item_tokens)
+        index = _shard_for_serving(index, args)
+    else:
+        serve_scorer = scorer
+    retriever = make_retriever(args.retriever, index, serve_scorer, cfg)
     svc = AdaCURService(retriever=retriever, max_batch=args.batch)
     _drive(svc, args, cfg,
            qid_range=(n_anchor_q, n_anchor_q + n_serve_q),
-           label=f"real-ce/{args.retriever}")
-    inner = scorer.inner if args.cache else scorer
-    print(f"compiled CE shapes: {inner.n_traces} (static buckets — no "
-          f"retraces); {inner.stats.batch_pad} padded micro-batch rows")
+           label=f"real-ce/{args.retriever}" + ("/mesh" if args.mesh else ""))
+    if args.mesh:
+        print(f"device-resident CE: {serve_scorer.n_traces} in-trace forwards "
+              f"compiled (stable across batches); "
+              f"{serve_scorer.stats.batch_pad} item-shard pad rows excluded "
+              f"from {serve_scorer.stats.ce_calls} measured CE calls")
+    else:
+        inner = scorer.inner if args.cache else scorer
+        print(f"compiled CE shapes: {inner.n_traces} (static buckets — no "
+              f"retraces); {inner.stats.batch_pad} padded micro-batch rows")
 
 
 if __name__ == "__main__":

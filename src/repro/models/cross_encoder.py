@@ -53,6 +53,40 @@ def score_tokens(
     return (cls @ params["score_head"].astype(jnp.float32))[:, 0]
 
 
+def build_pair_tokens(
+    query_tokens: jax.Array,         # (B, Lq) int32, no internal padding
+    item_tokens: jax.Array,          # (B, K, Li) int32, no internal padding
+    *,
+    pad_to: int,                     # bucket length >= Lq + Li + 3
+    cls_id: int = 1,
+    sep_id: int = 2,
+    pad_id: int = 0,
+) -> jax.Array:
+    """In-trace pair assembly: ``[CLS] q [SEP] i [SEP]`` -> (B, K, pad_to).
+
+    The traced counterpart of a host-side ``pair_fn``: device-resident
+    scorers gather corpus token rows on device and concatenate them here,
+    inside the engine's compiled program.  Inputs are valid-first fixed
+    length, so the output keeps the trailing-padding contract
+    :func:`score_tokens` relies on for per-example length masking.
+    """
+    b, lq = query_tokens.shape
+    _, k, li = item_tokens.shape
+    length = lq + li + 3
+    if pad_to < length:
+        raise ValueError(f"pad_to={pad_to} cannot hold a pair of length {length}")
+    q = jnp.broadcast_to(query_tokens[:, None, :], (b, k, lq)).astype(jnp.int32)
+    fill = lambda tok, n: jnp.full((b, k, n), tok, jnp.int32)
+    return jnp.concatenate(
+        [
+            fill(cls_id, 1), q, fill(sep_id, 1),
+            item_tokens.astype(jnp.int32), fill(sep_id, 1),
+            fill(pad_id, pad_to - length),
+        ],
+        axis=-1,
+    )
+
+
 def score_pairs(
     params,
     pair_tokens: jax.Array,          # (B, K, L) — K items per query

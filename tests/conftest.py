@@ -2,11 +2,23 @@
 tests and benches must see the single real CPU device; only
 ``launch/dryrun.py`` installs the 512-device placeholder mesh."""
 
+import os
+
 import jax
 import jax.numpy as jnp
 import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+# On a single-core host the async CPU client has one execute thread: a host
+# callback that launches a nested jit (CrossEncoderScorer's CE forward)
+# blocks that thread waiting for work that needs the same thread — the
+# single-device twin of the SPMD-mesh deadlock DeviceCEScorer exists to fix.
+# Synchronous dispatch runs callbacks inline on the caller, so the nested
+# launch cannot self-block; pipelining is worthless on one core anyway.
+# Must run at import time, before any test instantiates the CPU client.
+if len(os.sched_getaffinity(0)) < 2:
+    jax.config.update("jax_cpu_enable_async_dispatch", False)
 
 
 @pytest.fixture(scope="session")

@@ -413,3 +413,101 @@ class TestServiceOverIndex:
             assert isinstance(ret, cls)
         with pytest.raises(ValueError, match="unknown retriever"):
             make_retriever("bm25", index, sf, CFG)
+
+
+class TestTokenTable:
+    """The corpus token table (device-resident CE): positional lockstep with
+    the payload through every mutation, v3 save/load round-trip, and the
+    lowest-version stamping that keeps older readers working."""
+
+    def _tokens(self, n, item_len=6):
+        return (np.arange(n * item_len, dtype=np.int32).reshape(n, item_len)
+                % 97) + 3
+
+    def test_attach_pads_to_capacity(self, dom):
+        index = AnchorIndex.from_r_anc(dom["m"][:40, :250],
+                                       item_ids=jnp.arange(250), capacity=300)
+        tok = self._tokens(250)
+        with_tok = index.with_item_tokens(tok)
+        assert with_tok.item_tokens.shape == (300, 6)
+        np.testing.assert_array_equal(np.asarray(with_tok.item_tokens[:250]), tok)
+        np.testing.assert_array_equal(
+            np.asarray(with_tok.item_tokens[250:]), np.zeros((50, 6), np.int32)
+        )
+        # full-capacity tables attach as-is; other row counts are rejected
+        assert index.with_item_tokens(
+            self._tokens(300)
+        ).item_tokens.shape == (300, 6)
+        with pytest.raises(ValueError, match="rows"):
+            index.with_item_tokens(self._tokens(123))
+
+    def test_mutation_keeps_positional_lockstep(self, dom):
+        m = dom["m"]
+        tok = self._tokens(250)
+        index = AnchorIndex.from_r_anc(
+            m[:40, :250], item_ids=jnp.arange(250), capacity=300
+        ).with_item_tokens(tok)
+
+        # add_items without tokens must fail loudly, with them it appends
+        with pytest.raises(ValueError, match="new_tokens"):
+            index.add_items(jnp.arange(250, 260), cols=m[:40, 250:260])
+        new_tok = self._tokens(10) + 1
+        grown = index.add_items(jnp.arange(250, 260), cols=m[:40, 250:260],
+                                new_tokens=new_tok)
+        np.testing.assert_array_equal(np.asarray(grown.item_tokens[:250]), tok)
+        np.testing.assert_array_equal(np.asarray(grown.item_tokens[250:260]),
+                                      new_tok)
+
+        # remove_items compacts the table with the same stable permutation
+        # as the payload: position j still tokenizes the item at position j
+        shrunk = grown.remove_items(jnp.arange(100, 150))
+        ids = np.asarray(shrunk.item_ids)
+        table = np.asarray(shrunk.item_tokens)
+        full = np.concatenate([tok, new_tok], axis=0)
+        for pos in range(int(shrunk.n_items)):
+            np.testing.assert_array_equal(table[pos], full[ids[pos]])
+
+        # tokenless index rejects stray new_tokens
+        bare = AnchorIndex.from_r_anc(m[:40, :250], capacity=300)
+        with pytest.raises(ValueError, match="no token table"):
+            bare.add_items(jnp.arange(250, 260), cols=m[:40, 250:260],
+                           new_tokens=new_tok)
+
+    def test_save_load_round_trip_and_version(self, dom, tmp_path):
+        m = dom["m"]
+        base = AnchorIndex.from_r_anc(m[:40, :250], capacity=300)
+
+        # a token-carrying index stamps v3 and round-trips the table
+        path3 = str(tmp_path / "v3")
+        base.with_item_tokens(self._tokens(250)).save(path3)
+        with open(os.path.join(path3, "index_meta.json")) as f:
+            assert json.load(f)["format_version"] == 3
+        loaded = AnchorIndex.load(path3)
+        np.testing.assert_array_equal(
+            np.asarray(loaded.item_tokens),
+            np.asarray(base.with_item_tokens(self._tokens(250)).item_tokens),
+        )
+
+        # feature-gated stamping: plain fp32 stays v1, quantized-only v2
+        path1 = str(tmp_path / "v1")
+        base.save(path1)
+        with open(os.path.join(path1, "index_meta.json")) as f:
+            assert json.load(f)["format_version"] == 1
+        assert AnchorIndex.load(path1).item_tokens is None
+        path2 = str(tmp_path / "v2")
+        base.quantize("int8", tile=50).save(path2)
+        with open(os.path.join(path2, "index_meta.json")) as f:
+            assert json.load(f)["format_version"] == 2
+
+    def test_capacity_repad_preserves_table(self, dom):
+        index = AnchorIndex.from_r_anc(
+            dom["m"][:40, :250], capacity=300
+        ).with_item_tokens(self._tokens(250))
+        wide = index.with_capacity(384)
+        assert wide.item_tokens.shape == (384, 6)
+        np.testing.assert_array_equal(
+            np.asarray(wide.item_tokens[:250]), self._tokens(250)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(wide.item_tokens[250:]), 0
+        )

@@ -601,6 +601,95 @@ def check_engine_spmd_golden():
     assert same >= 0.9, f"sharded top-k id overlap {same:.3f} < 0.9"
 
 
+def check_engine_device_ce():
+    """The tentpole acceptance surface: the REAL transformer cross-encoder
+    as a device-resident stage of the one shard_map program (DeviceCEScorer)
+    on a 2x2 (data x items) mesh — no host callback, no nested launch, no
+    psum-rendezvous deadlock.  Exact top-k parity vs the single-device
+    exact-matrix search AND the single-device device-resident engine;
+    exactly-once system-wide CE accounting with item-shard pad rows
+    excluded; zero retraces across runtime n_rounds / n_valid."""
+    import jax, jax.numpy as jnp, numpy as np
+
+    from repro.configs import registry
+    from repro.configs.base import AdaCURConfig, replace
+    from repro.core.engine import ce_call_plan, make_engine, make_sharded_engine
+    from repro.core.scorer import (
+        CrossEncoderScorer, DeviceCEScorer, TabulatedScorer,
+    )
+    from repro.data.synthetic import make_zeshel_like
+    from repro.models import cross_encoder
+
+    # capacity 256 = 2 item shards x NOISE_BLOCK(128): shardable unpadded
+    ds = make_zeshel_like(0, n_items=256, n_queries=24, item_len=12, query_len=8)
+    cfg_lm = replace(
+        registry.CE_TINY, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=ds.vocab_size, dtype="float32",
+        remat=False,
+    )
+    params, _ = cross_encoder.init_cross_encoder(jax.random.PRNGKey(0), cfg_lm)
+    host = CrossEncoderScorer(
+        params, cfg_lm, ds.pair_tokens, micro_batch=16, flash_block=(16, 16),
+        len_buckets=(32, 64),
+    )
+    m = np.asarray(host._host(np.arange(24), np.tile(np.arange(256), (24, 1))))
+
+    def device_scorer():
+        return DeviceCEScorer(
+            params, cfg_lm,
+            query_token_fn=lambda q: np.asarray(ds.query_tokens)[q],
+            item_tokens=ds.item_tokens, len_buckets=(32, 64),
+            flash_block=(16, 16),
+        )
+
+    cfg = AdaCURConfig(k_anchor=12, n_rounds=4, budget_ce=24, k_retrieve=10,
+                       loop_mode="fori")
+    r_anc = jnp.asarray(m[:16])
+    q = jnp.arange(16, 22)          # 6 rows -> b_local=3 per data shard
+    key = jax.random.PRNGKey(7)
+
+    mesh = jax.make_mesh((2, 2), ("data", "items"))
+    sc = device_scorer()
+    run = make_sharded_engine(sc, cfg, mesh)
+    q_tok = sc.tokenize_queries(q)
+    res = jax.block_until_ready(run(r_anc, q_tok, key))
+
+    # (a) exact parity vs the single-device exact-matrix search...
+    ref = jax.block_until_ready(
+        make_engine(TabulatedScorer(m), cfg)(r_anc, q, key)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.topk_idx), np.asarray(ref.topk_idx)
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.topk_scores), np.asarray(ref.topk_scores), **TOL
+    )
+    # ...and vs the single-device device-resident engine
+    sc1 = device_scorer()
+    res1 = jax.block_until_ready(
+        make_engine(sc1, cfg)(r_anc, sc1.tokenize_queries(q), key)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.topk_idx), np.asarray(res1.topk_idx)
+    )
+
+    # (b) exactly-once accounting under the mesh: each round's 3x3=9 local
+    # pair rows pad to 10 over 2 item shards (batch_pad counts them), yet
+    # measured CE calls equal the plan with pad rows excluded
+    rounds = int(res.rounds_done)
+    planned = ce_call_plan(cfg, rounds) * int(q.shape[0])
+    assert sc.stats.ce_calls == planned, (sc.stats.ce_calls, planned)
+    assert sc.stats.batch_pad > 0, "expected item-shard pad rows"
+    assert sc1.stats.ce_calls == planned, (sc1.stats.ce_calls, planned)
+
+    # (c) zero retraces across runtime n_rounds and corpus n_valid
+    n0 = sc.n_traces
+    for r in (1, 4, 2):
+        jax.block_until_ready(run(r_anc, q_tok, key, n_rounds=r))
+    jax.block_until_ready(run(r_anc, q_tok, key, n_valid=192))
+    assert sc.n_traces == n0, (sc.n_traces, n0)
+
+
 CHECKS = {
     "decode_attention": check_decode_attention,
     "moe_ep": check_moe_ep,
@@ -614,6 +703,7 @@ CHECKS = {
     "engine_spmd_invariants": check_engine_spmd_invariants,
     "engine_spmd_eligible": check_engine_spmd_eligible,
     "engine_spmd_golden": check_engine_spmd_golden,
+    "engine_device_ce": check_engine_device_ce,
 }
 
 
@@ -647,9 +737,41 @@ def test_multidevice(check, forced_devices):
     assert f"OK {check}" in proc.stdout
 
 
+@pytest.mark.timeout(600)
+def test_serve_real_ce_mesh():
+    """The config this PR un-rejects: ``--scorer real-ce --mesh 2x2`` must
+    serve end-to-end through the CLI — index built by the bulk CE path,
+    token table sharded with the payload, DeviceCEScorer inside the SPMD
+    program — with measured-accounting output and no deadlock."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--scorer", "real-ce", "--mesh", "2x2", "--n-items", "128",
+         "--requests", "8", "--batch", "8", "--budget", "16", "--rounds", "2"],
+        env=env, capture_output=True, text=True, timeout=560, cwd=_ROOT,
+    )
+    assert proc.returncode == 0, (
+        f"serve --scorer real-ce --mesh 2x2 failed\n"
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    )
+    assert "served 8 requests" in proc.stdout, proc.stdout
+    assert "device-resident CE" in proc.stdout, proc.stdout
+
+
 if __name__ == "__main__":
+    import faulthandler
+
     name = sys.argv[1] if len(sys.argv) > 1 else None
     names = [name] if name else sorted(CHECKS)
+    watchdog_s = float(os.environ.get("MULTIDEVICE_WATCHDOG_S", "480"))
     for n in names:
+        # deadlock watchdog: a future collective/callback hang dumps every
+        # thread's stack and exits nonzero instead of sitting silent until
+        # the outer subprocess timeout kills it with no diagnostics
+        faulthandler.dump_traceback_later(watchdog_s, exit=True)
         CHECKS[n]()
+        faulthandler.cancel_dump_traceback_later()
         print(f"OK {n}")

@@ -13,6 +13,7 @@ from repro.core import engine
 from repro.core.scorer import (
     CachingScorer,
     CrossEncoderScorer,
+    DeviceCEScorer,
     Scorer,
     SyntheticScorer,
     TabulatedScorer,
@@ -142,12 +143,22 @@ class TestCrossEncoderScorer:
         assert sc.n_traces == n0
         assert sc.stats.batch_pad > 0          # partial chunks were padded
 
-    def test_bucket_overflow_raises(self, ce_setup):
+    def test_bucket_overflow_raises_at_construction(self, ce_setup):
+        """Satellite: the pair-length probe fails eagerly, with an actionable
+        message — not an opaque XLA error from inside jax.pure_callback."""
+        ds, (params, cfg_lm) = ce_setup["ds"], ce_setup["lm"]
+        with pytest.raises(ValueError, match="len_buckets"):
+            CrossEncoderScorer(params, cfg_lm, ds.pair_tokens, len_buckets=(8,))
+
+    def test_bucket_overflow_raises_per_call(self, ce_setup):
+        """With the probe disabled (pair_fn that rejects dummy ids), the host
+        enqueue path still raises the same actionable ValueError."""
         ds, (params, cfg_lm) = ce_setup["ds"], ce_setup["lm"]
         sc = CrossEncoderScorer(
-            params, cfg_lm, ds.pair_tokens, len_buckets=(8,)
+            params, cfg_lm, ds.pair_tokens, len_buckets=(8,),
+            probe_pair_len=False,
         )
-        with pytest.raises(ValueError, match="bucket"):
+        with pytest.raises(ValueError, match="len_buckets"):
             sc._host(np.arange(2), np.arange(4).reshape(2, 2))
 
     def test_flash_varlen_matches_ref_attention(self, ce_setup):
@@ -220,3 +231,117 @@ class TestEndToEndParity:
         np.testing.assert_array_equal(
             np.asarray(r1.topk_idx), np.asarray(r2.topk_idx)
         )
+
+    def test_microbatch_pad_rows_never_leak(self, ce_setup):
+        """Satellite audit: a batch size that forces micro-batch padding
+        (B=5, k_s=4 -> 20 pairs padded to 32; rerank 60 -> 64) keeps
+        measured == planned — pad rows are scored for shape stability but
+        never reach ``stats.ce_calls`` or the cache."""
+        m = ce_setup["m"]
+        ds, (params, cfg_lm) = ce_setup["ds"], ce_setup["lm"]
+        sc = CrossEncoderScorer(
+            params, cfg_lm, ds.pair_tokens, micro_batch=16,
+            flash_block=(16, 16), len_buckets=(32, 64),
+        )
+        cfg = AdaCURConfig(
+            k_anchor=12, n_rounds=3, budget_ce=24, k_retrieve=10,
+            loop_mode="fori",
+        )
+        r_anc = jnp.asarray(m[:16])
+        q = jnp.arange(16, 21)                       # B=5: every chunk pads
+        jax.block_until_ready(
+            engine.make_engine(sc, cfg)(r_anc, q, jax.random.PRNGKey(5))
+        )
+        assert sc.stats.ce_calls == engine.ce_call_plan(cfg) * 5
+        assert sc.stats.batch_pad > 0                # padding really happened
+        # through the cache: every miss keys exactly one real pair, so no
+        # pad-derived phantom entries can appear
+        inner = CrossEncoderScorer(
+            params, cfg_lm, ds.pair_tokens, micro_batch=16,
+            flash_block=(16, 16), len_buckets=(32, 64),
+        )
+        cache = CachingScorer(inner)
+        jax.block_until_ready(
+            engine.make_engine(cache, cfg)(r_anc, q, jax.random.PRNGKey(5))
+        )
+        assert cache.stats.cache_size == cache.stats.ce_calls
+        assert inner.stats.ce_calls == cache.stats.ce_calls
+        assert inner.stats.batch_pad > 0
+
+
+class TestDeviceCEScorer:
+    """The device-resident CE provider: in-trace pair assembly + forward,
+    exact parity with the host-callback scorer, and measured == planned
+    accounting fired from inside the compiled program."""
+
+    @pytest.fixture()
+    def device_scorer(self, ce_setup):
+        ds, (params, cfg_lm) = ce_setup["ds"], ce_setup["lm"]
+        return DeviceCEScorer(
+            params, cfg_lm,
+            query_token_fn=lambda q: np.asarray(ds.query_tokens)[q],
+            item_tokens=ds.item_tokens,
+            len_buckets=(32, 64), flash_block=(16, 16),
+        )
+
+    def test_matches_host_scorer(self, ce_setup, device_scorer):
+        q = jnp.arange(5)
+        idx = jnp.asarray((np.arange(20).reshape(5, 4) * 3) % 80)
+        q_tok = device_scorer.tokenize_queries(q)
+        out = np.asarray(device_scorer(q_tok, idx))
+        ref = np.asarray(ce_setup["scorer"](q, idx))
+        np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+        assert device_scorer.stats.ce_calls == 20
+        assert device_scorer.stats.requests == 1
+
+    def test_engine_search_matches_tabulated(self, ce_setup, device_scorer):
+        """Device-resident CE retrieves exactly what the tabulated exact
+        matrix retrieves, with zero retraces across run-shape variations."""
+        m = ce_setup["m"]
+        cfg = AdaCURConfig(
+            k_anchor=12, n_rounds=3, budget_ce=24, k_retrieve=10,
+            loop_mode="fori",
+        )
+        r_anc = jnp.asarray(m[:16])
+        q = jnp.arange(16, 24)
+        q_tok = device_scorer.tokenize_queries(q)
+        run = engine.make_engine(device_scorer, cfg)
+        res = jax.block_until_ready(run(r_anc, q_tok, jax.random.PRNGKey(5)))
+        res_tab = jax.block_until_ready(
+            engine.make_engine(TabulatedScorer(m), cfg)(
+                r_anc, q, jax.random.PRNGKey(5)
+            )
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.topk_idx), np.asarray(res_tab.topk_idx)
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.topk_scores), np.asarray(res_tab.topk_scores),
+            atol=1e-4, rtol=1e-4,
+        )
+        assert device_scorer.stats.ce_calls == engine.ce_call_plan(cfg) * 8
+        n0 = device_scorer.n_traces
+        for n_rounds in (1, 3, 2):
+            jax.block_until_ready(
+                run(r_anc, q_tok, jax.random.PRNGKey(5), n_rounds=n_rounds)
+            )
+        assert device_scorer.n_traces == n0          # bucketed: no retraces
+
+    def test_bucket_overflow_raises_eagerly(self, ce_setup):
+        ds, (params, cfg_lm) = ce_setup["ds"], ce_setup["lm"]
+        sc = DeviceCEScorer(
+            params, cfg_lm,
+            query_token_fn=lambda q: np.asarray(ds.query_tokens)[q],
+            item_tokens=ds.item_tokens, len_buckets=(8,),
+        )
+        with pytest.raises(ValueError, match="len_buckets"):
+            sc.tokenize_queries(jnp.arange(2))
+
+    def test_requires_token_table(self, ce_setup):
+        ds, (params, cfg_lm) = ce_setup["ds"], ce_setup["lm"]
+        sc = DeviceCEScorer(
+            params, cfg_lm,
+            query_token_fn=lambda q: np.asarray(ds.query_tokens)[q],
+        )
+        with pytest.raises(ValueError, match="token table"):
+            sc(jnp.zeros((1, 8), jnp.int32), jnp.zeros((1, 2), jnp.int32))
