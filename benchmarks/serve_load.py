@@ -1,0 +1,340 @@
+"""Serving-tier load benchmark under injected faults -> BENCH_serve.json.
+
+Drives the replica router (``launch.router``) with Poisson arrivals from a
+simulated user population, with and without deterministic faults
+(``launch.faults.FaultPlan``), and records p50/p99 latency, QPS, and the
+shed/degraded/retry/hedge/quarantine rates per scenario:
+
+- **baseline**            — fault-free: the latency/QPS reference.
+- **scorer_fault**        — replica 0's scorer raises on every callback:
+                            error-quarantined, traffic retried to peers.
+- **slow_replica**        — replica 0 stalls every batch: hedged re-dispatch
+                            + straggler-watchdog quarantine keep tail
+                            latency near fault-free.
+- **swap_midflight**      — the live index is swapped (new external-id
+                            namespace) while requests are in flight.
+- **deadline_degraded**   — per-request budgets expire mid-search: the
+                            anytime engine returns provisional top-k from
+                            completed rounds, flagged degraded.
+
+CI gates (asserted here AND against the JSON artifact in the workflow):
+
+1. **no lost requests** under every scenario: each submitted request ends
+   in exactly one terminal outcome (ok / degraded ok / error / rejected).
+2. **hedging bounds the tail**: slow-replica p99 <= 2x fault-free p99
+   (with a small absolute floor absorbing CI timer noise).
+3. **degraded answers are prefix-consistent**: every degraded response
+   equals bit-for-bit the answer of an explicit ``n_rounds =
+   rounds_completed`` run with the same key — degradation truncates the
+   search trajectory, it never invents a different one.
+
+Usage:  PYTHONPATH=src python -m benchmarks.serve_load [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AdaCURConfig
+from repro.core.engine import AdaCURRetriever, ce_call_plan
+from repro.core.index import AnchorIndex
+from repro.core.scorer import TabulatedScorer
+from repro.launch.faults import (
+    FaultPlan,
+    FaultyScorer,
+    ScorerFault,
+    SleepFault,
+    SwapFault,
+)
+from repro.launch.router import Router
+from repro.launch.serve import AdaCURService, RetrievalRequest
+
+N_QUERIES = 200
+CFG = AdaCURConfig(
+    k_anchor=8, n_rounds=4, budget_ce=24, k_retrieve=10, loop_mode="fori"
+)
+P99_FLOOR_MS = 20.0     # absolute floor for the hedging ratio denominator:
+                        # below this, CI timer noise dominates real latency
+
+
+def _matrix(n_items: int) -> np.ndarray:
+    rng = np.random.default_rng(0)
+    return rng.standard_normal((N_QUERIES, n_items)).astype(np.float32)
+
+
+def _service(m, *, plan=None, replica=None, item_offset=0, n_items=None,
+             max_batch=8, buckets=None, deterministic=False):
+    n_items = m.shape[1] if n_items is None else n_items
+    wide = m
+    if item_offset:
+        wide = np.zeros((m.shape[0], item_offset + n_items), dtype=np.float32)
+        wide[:, item_offset:] = m[:, :n_items]
+    scorer = TabulatedScorer(wide)
+    if plan is not None:
+        scorer = FaultyScorer(scorer, plan, replica=replica)
+    index = AnchorIndex.from_r_anc(
+        jnp.asarray(m[:64, :n_items]),
+        item_ids=jnp.arange(item_offset, item_offset + n_items),
+    )
+    retriever = AdaCURRetriever.from_index(index, scorer, CFG, anytime=True)
+    return AdaCURService(
+        retriever=retriever, max_batch=max_batch, max_wait_s=60.0,
+        batch_buckets=buckets or [2, 4, max_batch],
+        deterministic=deterministic,
+    )
+
+
+def _warm(router) -> None:
+    """Compile every batch bucket on every replica through the full service
+    flush path (search + id gather) before any timing starts.  Goes through
+    the flush error boundary, so warming a deliberately-faulty replica still
+    populates its jit cache instead of crashing the benchmark."""
+    for rep in router.replicas:
+        svc = rep.service
+        for b in svc.batch_buckets:
+            with svc._lock:
+                svc._pending.extend(
+                    RetrievalRequest(query_id=i) for i in range(b)
+                )
+                svc.flush()
+
+
+def _drive_poisson(router, n_requests, mean_interarrival_s, rng,
+                   deadline_s=None):
+    """Open-loop Poisson arrivals; returns (tickets, outcomes, wall_s)."""
+    tickets = []
+    t0 = time.monotonic()
+    for _ in range(n_requests):
+        tickets.append(router.submit(
+            int(rng.integers(0, N_QUERIES)), deadline_s=deadline_s))
+        time.sleep(float(rng.exponential(mean_interarrival_s)))
+    outs = [router.result(t, timeout=120.0) for t in tickets]
+    wall = time.monotonic() - t0
+    return tickets, outs, wall
+
+
+def _summarize(name, tickets, outs, wall, router) -> dict:
+    lost = sum(o is None for o in outs)
+    terminal = [o for o in outs if o is not None]
+    lat_ms = [o.latency_s * 1e3 for o in terminal if o.status == "ok"]
+    n = len(tickets)
+    row = {
+        "requests": n,
+        "wall_s": round(wall, 3),
+        "qps": round(n / wall, 1) if wall > 0 else None,
+        "p50_ms": round(float(np.percentile(lat_ms, 50)), 2) if lat_ms else None,
+        "p99_ms": round(float(np.percentile(lat_ms, 99)), 2) if lat_ms else None,
+        "ok": sum(o.status == "ok" for o in terminal),
+        "degraded": sum(o.degraded for o in terminal),
+        "errors": sum(o.status == "error" for o in terminal),
+        "rejected": sum(o.status == "rejected" for o in terminal),
+        "lost": lost,
+        "hedges": router.stats["hedges"],
+        "retries": router.stats["retries"],
+        "quarantines": router.stats["quarantines"],
+        "quarantined_replicas": list(router.quarantined),
+    }
+    assert lost == 0, f"{name}: {lost} requests lost (no terminal outcome)"
+    assert row["ok"] + row["errors"] + row["rejected"] == n, row
+    print(f"[{name}] " + " ".join(
+        f"{k}={v}" for k, v in row.items() if k != "quarantined_replicas"
+    ))
+    return row
+
+
+def run(quick: bool) -> dict:
+    n_items = 500 if quick else 2000
+    n_req = 120 if quick else 400
+    interarrival = 0.008 if quick else 0.005
+    m = _matrix(n_items)
+    rng = np.random.default_rng(7)
+    out = {"config": {
+        "quick": quick, "n_items": n_items, "requests_per_scenario": n_req,
+        "mean_interarrival_ms": interarrival * 1e3, "replicas": 2,
+        "cfg": {"k_anchor": CFG.k_anchor, "n_rounds": CFG.n_rounds,
+                "budget_ce": CFG.budget_ce, "k_retrieve": CFG.k_retrieve},
+    }, "scenarios": {}}
+    scn = out["scenarios"]
+
+    # Heterogeneous batch buckets make healthy batch times multi-modal (a
+    # bucket-8 batch is legitimately several x a bucket-2 batch), so
+    # scenarios that are not exercising the straggler watchdog run it with
+    # a threshold far above that spread — only slow_replica tightens it.
+    LAX_WD = {"watchdog_threshold": 50.0, "watchdog_patience": 3}
+
+    # ------------------------------------------------------------ baseline
+    router = Router([_service(m), _service(m)], queue_limit=64, **LAX_WD)
+    try:
+        _warm(router)
+        tickets, outs, wall = _drive_poisson(router, n_req, interarrival, rng)
+        row = _summarize("baseline", tickets, outs, wall, router)
+        assert row["quarantines"] == 0, "fault-free run must not quarantine"
+        scn["baseline"] = row
+    finally:
+        router.close()
+    p99_base_ms = scn["baseline"]["p99_ms"]
+    hedge_after_s = max(0.02, p99_base_ms / 1e3)
+
+    # -------------------------------------------------------- scorer_fault
+    # replica 0's scorer raises on every callback until quarantine kicks in
+    # (2 error batches at max_consecutive_errors=2 — 2000 calls is plenty)
+    plan = FaultPlan(scorer_faults=[
+        ScorerFault(call_k=k, replica=0) for k in range(1, 2000)
+    ])
+    router = Router(
+        [_service(m, plan=plan, replica=0), _service(m, plan=plan, replica=1)],
+        queue_limit=64, max_retries=2, max_consecutive_errors=2, plan=plan,
+        **LAX_WD,
+    )
+    try:
+        _warm(router)
+        tickets, outs, wall = _drive_poisson(router, n_req, interarrival, rng)
+        row = _summarize("scorer_fault", tickets, outs, wall, router)
+        assert row["errors"] == 0, "retries should absorb a single bad replica"
+        assert 0 in row["quarantined_replicas"]
+        scn["scorer_fault"] = row
+    finally:
+        router.close()
+
+    # -------------------------------------------------------- slow_replica
+    stall_s = max(0.5, 20 * p99_base_ms / 1e3)
+    plan = FaultPlan(sleep_faults=[SleepFault(replica=0, seconds=stall_s)])
+    router = Router(
+        [_service(m, plan=plan, replica=0), _service(m, plan=plan, replica=1)],
+        queue_limit=64, hedge_after_s=hedge_after_s, plan=plan,
+        watchdog_threshold=8.0, watchdog_patience=1,
+    )
+    try:
+        _warm(router)
+        # fleet baseline for the shared-deque watchdog: healthy batches sit
+        # far under the flag level, the injected stall far over it
+        router.replicas[1].watchdog.window.extend(
+            [max(0.05, 2 * p99_base_ms / 1e3)] * 8
+        )
+        tickets, outs, wall = _drive_poisson(router, n_req, interarrival, rng)
+        row = _summarize("slow_replica", tickets, outs, wall, router)
+        assert row["quarantined_replicas"] == [0], (
+            "watchdog must flag exactly the stalled replica", row)
+        row["stall_s"] = round(stall_s, 3)
+        row["hedge_after_ms"] = round(hedge_after_s * 1e3, 1)
+        denom = max(p99_base_ms, P99_FLOOR_MS)
+        row["p99_over_baseline"] = round(row["p99_ms"] / denom, 3)
+        scn["slow_replica"] = row
+    finally:
+        router.close()
+
+    # ------------------------------------------------------ swap_midflight
+    new_index = AnchorIndex.from_r_anc(
+        jnp.asarray(m[:64]), item_ids=jnp.arange(20000, 20000 + n_items)
+    )
+    plan = FaultPlan(swap_faults=[SwapFault(at_seq=n_req // 2)])
+    services = [
+        _service(m, item_offset=10000, n_items=n_items) for _ in range(2)
+    ]
+    for svc in services:
+        wide = np.zeros((N_QUERIES, 20000 + n_items), dtype=np.float32)
+        wide[:, 10000:10000 + n_items] = m
+        wide[:, 20000:] = m
+        svc._scorer.matrix = wide
+    router = Router(services, queue_limit=64, plan=plan,
+                    swap_index_fn=lambda: new_index, **LAX_WD)
+    try:
+        _warm(router)
+        tickets, outs, wall = _drive_poisson(router, n_req, interarrival, rng)
+        row = _summarize("swap_midflight", tickets, outs, wall, router)
+        consistent = served_new = True
+        seen_new = False
+        for o in outs:
+            if o.status != "ok":
+                continue
+            ids = o.response.item_ids
+            old = ((ids >= 10000) & (ids < 20000)).all()
+            new = (ids >= 20000).all()
+            consistent = consistent and bool(old or new)
+            seen_new = seen_new or bool(new)
+        row["namespace_consistent"] = consistent
+        row["swap_took_effect"] = seen_new
+        assert consistent, "mixed-namespace response under mid-flight swap"
+        assert seen_new
+        scn["swap_midflight"] = row
+    finally:
+        router.close()
+
+    # --------------------------------------------------- deadline_degraded
+    # service-level, deterministic, bucket=1: each degraded response is
+    # replayed as an explicit n_rounds=rounds_completed search on the same
+    # key and must match bit-for-bit (the prefix-consistency gate)
+    svc = _service(m, max_batch=1, buckets=[1], deterministic=True)
+    jax.block_until_ready(svc.retriever.search(jnp.arange(1)).topk_idx)
+    n_dead = 20 if quick else 50
+    degraded = prefix_ok = 0
+    lat_ms = []
+    for _ in range(n_dead):
+        qid = int(rng.integers(0, N_QUERIES))
+        (r,) = svc.submit(RetrievalRequest(
+            query_id=qid, deadline_t=time.monotonic())) or svc.flush()
+        assert r.status == "ok"
+        lat_ms.append(r.latency_s * 1e3)
+        if not r.degraded:
+            continue
+        degraded += 1
+        ref = svc.retriever.search(
+            jnp.asarray([qid]), svc._key, n_rounds=r.rounds_completed
+        )
+        ref_ids = np.asarray(svc.index.gather_item_ids(ref.topk_idx))[0]
+        if (np.array_equal(r.item_ids, ref_ids)
+                and np.array_equal(r.scores, np.asarray(ref.topk_scores[0]))
+                and r.measured_ce_calls == ce_call_plan(CFG, r.rounds_completed)):
+            prefix_ok += 1
+    row = {
+        "requests": n_dead,
+        "degraded": degraded,
+        "prefix_consistent": degraded == prefix_ok,
+        "p50_ms": round(float(np.percentile(lat_ms, 50)), 2),
+        "rounds_budget": CFG.n_rounds,
+    }
+    print(f"[deadline_degraded] " + " ".join(f"{k}={v}" for k, v in row.items()))
+    assert degraded > 0, "expired deadlines must degrade at least one search"
+    assert row["prefix_consistent"], (degraded, prefix_ok)
+    scn["deadline_degraded"] = row
+
+    # ---------------------------------------------------------------- gates
+    hedged_ratio = scn["slow_replica"]["p99_over_baseline"]
+    out["gates"] = {
+        "no_lost_requests": all(
+            s.get("lost", 0) == 0 for s in scn.values()
+        ),
+        "hedged_p99_ratio": hedged_ratio,
+        "hedged_p99_within_2x": hedged_ratio <= 2.0,
+        "degraded_prefix_consistent": scn["deadline_degraded"][
+            "prefix_consistent"],
+    }
+    assert out["gates"]["no_lost_requests"]
+    assert out["gates"]["hedged_p99_within_2x"], scn["slow_replica"]
+    assert out["gates"]["degraded_prefix_consistent"]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run (smaller corpus, fewer arrivals)")
+    args = ap.parse_args()
+    logging.getLogger("jax._src.callback").setLevel(logging.CRITICAL)
+
+    out = run(quick=args.quick)
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print("wrote BENCH_serve.json")
+    print(json.dumps(out["gates"], indent=2))
+
+
+if __name__ == "__main__":
+    main()

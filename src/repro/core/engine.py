@@ -45,6 +45,7 @@ path:
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable, NamedTuple, Optional, Protocol, Tuple, runtime_checkable
@@ -81,6 +82,59 @@ def ce_call_plan(cfg: AdaCURConfig, rounds: Optional[int] = None) -> int:
         raise ValueError(f"rounds={r} outside [1, {cfg.n_rounds}]")
     k_r = cfg.budget_ce - k_i if cfg.split_budget else 0
     return k_s * r + k_r
+
+
+class AnytimeDeadline:
+    """Host-side wall-clock deadline the engine's round loop polls.
+
+    The anytime-serving contract: every round boundary of the multi-round
+    search is a valid (if coarser) answer, so a search that runs out of
+    latency budget should *return the provisional top-k from the rounds it
+    completed* instead of nothing.  This object is the host<->trace bridge:
+    the serving layer ``arm()``s it with an absolute ``time.monotonic()``
+    deadline before a search and the engine's ``lax.while_loop`` cond polls
+    :meth:`expired` through a numpy-only ``pure_callback`` (no nested device
+    compute — the same mesh-legality class as ``TabulatedScorer``) once per
+    round.  Round 0 always runs (it executes before the loop), so an
+    already-expired deadline still yields a 1-round answer; the split-budget
+    rerank still spends its ``budget_ce - k_anchor`` calls on whatever
+    provisional estimate exists, keeping every response exact-CE ranked.
+
+    ``fired`` records whether the deadline actually cut the loop short —
+    ``arm()`` resets it, ``disarm()`` leaves it readable, so the serving
+    layer can flag the response ``degraded`` after the (blocking) search.
+
+    Single-device only: under the SPMD engine each shard would poll its own
+    wall clock, shards could disagree on the iteration count, and the next
+    collective would deadlock.  ``make_engine(anytime=True)`` is the one
+    construction path; ``make_sharded_engine`` has no such parameter, and
+    the serving tier's unit of redundancy is the *replica*, not the shard.
+    """
+
+    def __init__(self):
+        self.deadline_t = float("inf")
+        self.fired = False
+
+    def arm(self, deadline_t: float) -> None:
+        self.deadline_t = float(deadline_t)
+        self.fired = False
+
+    def disarm(self) -> None:
+        """Stop cutting rounds; ``fired`` stays readable for the caller."""
+        self.deadline_t = float("inf")
+
+    def _expired_host(self, r) -> np.bool_:
+        if time.monotonic() >= self.deadline_t:
+            self.fired = True
+            return np.bool_(True)
+        return np.bool_(False)
+
+    def expired(self, r: jax.Array) -> jax.Array:
+        """Traced poll; ``r`` rides along as an operand so each loop
+        iteration's callback is distinct (CSE-proof) and runs in order."""
+        return jax.pure_callback(
+            self._expired_host, jax.ShapeDtypeStruct((), jnp.bool_), r
+        )
 
 
 class EngineState(NamedTuple):
@@ -569,6 +623,7 @@ def engine_search(
     eligible: Optional[jax.Array] = None,
     pos_map: Optional[jax.Array] = None,
     item_tokens: Optional[jax.Array] = None,
+    deadline: Optional[AnytimeDeadline] = None,
     _ctx: Optional[ShardCtx] = None,
 ) -> AdaCURResult:
     """Run Algorithm 1 (+ retrieval) through the static-shape round engine.
@@ -624,6 +679,15 @@ def engine_search(
     which pair rows are gathered and the CE forward runs inside the engine
     program (:func:`_device_ce_score`).  Defaults to the scorer's own
     ``item_tokens`` table when the operand is omitted.
+
+    ``deadline`` (an :class:`AnytimeDeadline`) makes the search *anytime*:
+    the round loop additionally polls the armed wall-clock deadline and
+    exits early when it expires, returning the provisional top-k built from
+    the rounds completed so far (``rounds_done`` reports the count and the
+    unfilled slabs are masked out of the ranking exactly as under a runtime
+    ``n_rounds`` override).  Requires ``loop_mode='fori'`` and is rejected
+    under a shard context (per-shard clocks would disagree on the iteration
+    count and deadlock the collectives).
 
     ``_ctx`` is the shard context when this call is the per-shard body of
     the SPMD engine (:func:`make_sharded_engine`); ``r_anc``/``item_ids``
@@ -686,6 +750,19 @@ def engine_search(
     dyn_valid = invalid is not None or eligible is not None
     if cfg.loop_mode == "unrolled" and n_rounds is not None:
         raise ValueError("runtime n_rounds override requires loop_mode='fori'")
+    if deadline is not None:
+        if cfg.loop_mode != "fori":
+            raise ValueError(
+                "an anytime deadline needs the shape-invariant round loop: "
+                "use loop_mode='fori'"
+            )
+        if _ctx is not None:
+            raise ValueError(
+                "anytime deadlines are single-device only: per-shard clocks "
+                "would disagree on the round count and deadlock the SPMD "
+                "program's collectives — the serving tier's unit of "
+                "redundancy is the replica, not the shard"
+            )
 
     if first_anchors is not None:
         b = first_anchors.shape[0]
@@ -798,7 +875,10 @@ def engine_search(
 
             def cond(carry):
                 r, frac, _, _ = carry
-                return (r < r_dyn) & (frac < 1.0 - cfg.early_exit_tol)
+                go = (r < r_dyn) & (frac < 1.0 - cfg.early_exit_tol)
+                if deadline is not None:
+                    go = go & ~deadline.expired(r)
+                return go
 
             def while_body(carry):
                 r, _, st, prev_top = carry
@@ -811,6 +891,21 @@ def engine_search(
 
             rounds_done, _, state, _ = jax.lax.while_loop(
                 cond, while_body, (jnp.int32(1), jnp.float32(0.0), state, prev)
+            )
+        elif deadline is not None:
+            # anytime loop: same math as the fori path, but the cond also
+            # polls the armed wall-clock deadline — a mid-search expiry exits
+            # at the next round boundary with the provisional state so far
+            def cond(carry):
+                r, _ = carry
+                return (r < r_dyn) & ~deadline.expired(r)
+
+            def while_body(carry):
+                r, st = carry
+                return r + 1, body(r, st)
+
+            rounds_done, state = jax.lax.while_loop(
+                cond, while_body, (jnp.int32(1), state)
             )
         else:
             state = jax.lax.fori_loop(1, r_dyn, body, state)
@@ -871,6 +966,7 @@ def make_engine(
     n_valid_items=None,
     return_scores: Optional[bool] = None,
     jit_compile: bool = True,
+    anytime: bool = False,
 ):
     """jit-compiled engine closure over a concrete scorer + config.
 
@@ -883,9 +979,23 @@ def make_engine(
     ``jit_compile=False`` runs the engine eagerly (``loop_mode='unrolled'``
     only) so non-traceable scorers — numpy tokenizers, external CE services —
     still go through the one engine code path.
+
+    ``anytime=True`` (``fori`` mode only) threads an :class:`AnytimeDeadline`
+    through the round loop and exposes it as ``run.deadline``: arm it with
+    an absolute ``time.monotonic()`` deadline before a search and the loop
+    exits at the first round boundary past it, returning the provisional
+    top-k of the rounds completed (``rounds_done`` + ``deadline.fired``
+    tell the serving layer to flag the response degraded).  Costs one
+    numpy-only host callback per executed round, so it is opt-in.
     """
     if not jit_compile and cfg.loop_mode != "unrolled":
         raise ValueError("jit_compile=False requires loop_mode='unrolled'")
+    deadline = None
+    if anytime:
+        if cfg.loop_mode != "fori":
+            raise ValueError("anytime=True requires loop_mode='fori' (the "
+                             "deadline cuts a runtime round loop)")
+        deadline = AnytimeDeadline()
 
     def _run(r_anc, query, key, n_rounds, first_anchors=None, batch=None,
              n_valid=None, item_ids=None, eligible=None, pos_map=None,
@@ -896,6 +1006,7 @@ def make_engine(
             n_valid_items=n_valid if n_valid is not None else n_valid_items,
             n_rounds=n_rounds, return_scores=return_scores, item_ids=item_ids,
             eligible=eligible, pos_map=pos_map, item_tokens=item_tokens,
+            deadline=deadline,
         )
 
     if jit_compile:
@@ -915,6 +1026,7 @@ def make_engine(
         return _run(r_anc, query, key, n_rounds, first_anchors, batch,
                     n_valid, item_ids, eligible, pos_map, item_tokens)
 
+    run.deadline = deadline
     return run
 
 
@@ -1225,7 +1337,8 @@ class _IndexBacked:
 
     def _build_engine(self, cfg: AdaCURConfig, n_valid_items=None,
                       return_scores: Optional[bool] = None,
-                      jit_compile: bool = True) -> Callable:
+                      jit_compile: bool = True,
+                      anytime: bool = False) -> Callable:
         """make_engine or make_sharded_engine, by the index's placement."""
         idx = getattr(self, "index", None)
         mesh = axes = None
@@ -1236,6 +1349,13 @@ class _IndexBacked:
             return make_engine(
                 self.score_fn, cfg, n_valid_items,
                 return_scores=return_scores, jit_compile=jit_compile,
+                anytime=anytime,
+            )
+        if anytime:
+            raise ValueError(
+                "anytime deadlines are single-device only: a sharded engine "
+                "polling per-shard clocks would diverge across shards and "
+                "deadlock the SPMD collectives"
             )
         self._sharded = True
         return make_sharded_engine(
@@ -1297,6 +1417,7 @@ class AdaCURRetriever(_IndexBacked):
     n_valid_items: Optional[int] = None
     index: Optional[object] = None       # repro.core.index.AnchorIndex
     jit: bool = True
+    anytime: bool = False
     _run: Callable = field(init=False, repr=False)
 
     def __post_init__(self):
@@ -1304,27 +1425,46 @@ class AdaCURRetriever(_IndexBacked):
             raise ValueError("need r_anc or an AnchorIndex")
         self._apply_payload_policy(self.cfg)
         self._run = self._build_engine(
-            self.cfg, self.n_valid_items, jit_compile=self.jit
+            self.cfg, self.n_valid_items, jit_compile=self.jit,
+            anytime=self.anytime,
         )
+        self.deadline = getattr(self._run, "deadline", None)
 
     @classmethod
     def from_index(cls, index, score_fn: ScoreFn, cfg: AdaCURConfig,
-                   jit: bool = True) -> "AdaCURRetriever":
+                   jit: bool = True, anytime: bool = False) -> "AdaCURRetriever":
         """Bind the engine to an :class:`~repro.core.index.AnchorIndex`:
         ``score_fn`` receives *external item ids* (the engine maps positions
         through ``index.item_ids``), padded capacity is masked through the
         runtime ``n_valid`` bound, and index mutation never retraces."""
-        return cls(score_fn, None, cfg, index=index, jit=jit)
+        return cls(score_fn, None, cfg, index=index, jit=jit, anytime=anytime)
 
     def search(self, query, key=None, first_anchors=None, batch=None,
-               n_rounds=None, **_ignored):
+               n_rounds=None, deadline_t=None, **_ignored):
         key = jax.random.PRNGKey(0) if key is None else key
         query = self._prep_query(query)
         r_anc, kw = self._search_operands()
-        return self._run(
-            r_anc, query, key, first_anchors=first_anchors, batch=batch,
-            n_rounds=n_rounds, **kw,
-        )
+        if deadline_t is None:
+            return self._run(
+                r_anc, query, key, first_anchors=first_anchors, batch=batch,
+                n_rounds=n_rounds, **kw,
+            )
+        if self.deadline is None:
+            raise ValueError("deadline_t= requires anytime=True at construction")
+        # arm -> run -> *block* -> disarm: the dispatch is async, so the
+        # deadline must stay armed until the round loop has actually executed;
+        # ``deadline.fired`` then tells the caller whether the answer is a
+        # provisional (degraded) top-k of ``rounds_done`` rounds.
+        self.deadline.arm(deadline_t)
+        try:
+            res = self._run(
+                r_anc, query, key, first_anchors=first_anchors, batch=batch,
+                n_rounds=n_rounds, **kw,
+            )
+            jax.block_until_ready(res.topk_idx)
+            return res
+        finally:
+            self.deadline.disarm()
 
 
 @dataclass

@@ -24,7 +24,14 @@ class StepStats:
 
 class StragglerWatchdog:
     """Rolling-median deadline: a step slower than ``threshold`` x median is
-    flagged; ``on_straggler`` fires after ``patience`` consecutive flags."""
+    flagged; ``on_straggler`` fires after ``patience`` consecutive flags.
+
+    ``baseline`` optionally shares the healthy-step deque across watchdog
+    instances — the serving router gives each replica its own watchdog (its
+    own consecutive-flag state and callback) over one *fleet-wide* baseline,
+    so a replica that is slow from its very first batch is still flagged
+    against its healthy peers' median rather than its own history.
+    """
 
     def __init__(
         self,
@@ -32,13 +39,22 @@ class StragglerWatchdog:
         window: int = 20,
         patience: int = 3,
         on_straggler: Optional[Callable[[StepStats], None]] = None,
+        baseline: Optional[Deque[float]] = None,
     ):
         self.threshold = threshold
-        self.window: Deque[float] = collections.deque(maxlen=window)
+        self.window: Deque[float] = (
+            baseline if baseline is not None
+            else collections.deque(maxlen=window)
+        )
         self.patience = patience
         self.on_straggler = on_straggler
         self.consecutive = 0
         self.history: List[StepStats] = []
+
+    @staticmethod
+    def shared_baseline(window: int = 20) -> Deque[float]:
+        """A healthy-step deque to pass as ``baseline`` to a watchdog group."""
+        return collections.deque(maxlen=window)
 
     def _median(self) -> float:
         if not self.window:

@@ -1,0 +1,160 @@
+"""Deterministic fault injection for the serving tier.
+
+Every failure mode the router tier must survive — a scorer raising out of
+its host callback mid-round, a replica stalling past its latency budget, a
+live index swap racing in-flight requests — is expressed as a declarative
+:class:`FaultPlan` so chaos tests and the load benchmark reproduce the
+exact same failure at the exact same point on every run.  Nothing here is
+probabilistic: faults key off *counters* (the k-th scorer callback, the
+n-th admitted request), never clocks or RNG.
+
+The injection points live where the real failures would:
+
+- :class:`FaultyScorer` wraps any host-backed Scorer and raises
+  :class:`FaultInjectedError` from inside the ``pure_callback`` on the
+  scheduled call — the engine then surfaces ``XlaRuntimeError`` exactly as
+  a crashed production cross-encoder would.
+- ``FaultPlan.sleep_s`` is consulted by each replica worker before serving
+  a batch: a matching :class:`SleepFault` stalls that replica, which is
+  what drives the router's hedging and the straggler watchdog.
+- ``FaultPlan.swap_due`` fires at an admission sequence number, telling the
+  driver to ``swap_index`` while requests are in flight.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class FaultInjectedError(RuntimeError):
+    """Raised by :class:`FaultyScorer` on a scheduled call."""
+
+
+@dataclass(frozen=True)
+class ScorerFault:
+    """Raise out of the host scorer's k-th callback (1-based, per replica
+    counter).  ``replica=None`` matches any replica's counter."""
+
+    call_k: int
+    replica: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class SleepFault:
+    """Stall ``replica`` for ``seconds`` before it serves a batch.
+
+    ``request_seq=None`` makes the replica *persistently* slow (the
+    single-slow-replica scenario the hedging gate measures); a concrete
+    sequence number stalls only the batch containing that admitted request.
+    """
+
+    replica: int
+    seconds: float
+    request_seq: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class SwapFault:
+    """Swap the live index once ``at_seq`` requests have been admitted."""
+
+    at_seq: int
+
+
+class FaultPlan:
+    """The full deterministic failure schedule of one run.
+
+    Consulted by :class:`FaultyScorer` (scorer faults), the router's
+    replica workers (sleep faults), and the admission path (swap faults —
+    one-shot: each fires exactly once, at the first admission count at or
+    past its ``at_seq``).
+    """
+
+    def __init__(
+        self,
+        scorer_faults: Sequence[ScorerFault] = (),
+        sleep_faults: Sequence[SleepFault] = (),
+        swap_faults: Sequence[SwapFault] = (),
+    ):
+        self.scorer_faults = list(scorer_faults)
+        self.sleep_faults = list(sleep_faults)
+        self.swap_faults = sorted(swap_faults, key=lambda f: f.at_seq)
+        self._swaps_fired: List[SwapFault] = []
+
+    def scorer_should_raise(self, call_k: int, replica: Optional[int]) -> bool:
+        return any(
+            f.call_k == call_k and (f.replica is None or f.replica == replica)
+            for f in self.scorer_faults
+        )
+
+    def sleep_s(self, replica: int, request_seqs: Sequence[int]) -> float:
+        """Stall duration before ``replica`` serves the batch holding the
+        given admitted sequence numbers (0.0 = no fault)."""
+        seqs = set(request_seqs)
+        hit = [
+            f.seconds
+            for f in self.sleep_faults
+            if f.replica == replica
+            and (f.request_seq is None or f.request_seq in seqs)
+        ]
+        return max(hit, default=0.0)
+
+    def swap_due(self, admitted: int) -> bool:
+        """One-shot: True the first time the admission count reaches a
+        scheduled swap."""
+        if self.swap_faults and admitted >= self.swap_faults[0].at_seq:
+            self._swaps_fired.append(self.swap_faults.pop(0))
+            return True
+        return False
+
+
+class FaultyScorer:
+    """Wrap a host-backed Scorer; raise on the plan's scheduled calls.
+
+    Scoring, stats, and the pair log all stay on the *inner* scorer (the
+    wrapper adds a call counter only), so measured-CE accounting and the
+    exactly-once pair invariants read identically with or without the
+    wrapper.  The raise happens inside the ``pure_callback`` — the engine
+    sees the same ``XlaRuntimeError`` a production scorer crash produces,
+    and :meth:`AdaCURService.flush`'s error boundary must contain it.
+    """
+
+    def __init__(self, inner, plan: Optional[FaultPlan] = None,
+                 replica: Optional[int] = None):
+        self.inner = inner
+        self.plan = plan
+        self.replica = replica
+        self.calls = 0
+
+    @property
+    def stats(self):
+        return self.inner.stats
+
+    @property
+    def call_log(self):
+        return self.inner.call_log
+
+    def reset_stats(self) -> None:
+        self.inner.reset_stats()
+
+    def _host_entry(self, qids, idx):
+        self.calls += 1
+        if self.plan is not None and self.plan.scorer_should_raise(
+            self.calls, self.replica
+        ):
+            raise FaultInjectedError(
+                f"injected scorer fault: call {self.calls} on replica "
+                f"{self.replica}"
+            )
+        return np.asarray(self.inner._host_entry(qids, idx), dtype=np.float32)
+
+    def __call__(self, query, item_idx) -> jax.Array:
+        return jax.pure_callback(
+            self._host_entry,
+            jax.ShapeDtypeStruct(item_idx.shape, jnp.float32),
+            query, item_idx,
+        )

@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import argparse
 import os
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Union
@@ -76,17 +77,25 @@ from ..core.scorer import ScorerStats, scorer_stats
 class RetrievalRequest:
     query_id: int
     arrival_t: float = field(default_factory=time.monotonic)
+    deadline_t: Optional[float] = None   # absolute time.monotonic() budget;
+                                         # past it the search returns the
+                                         # provisional top-k (degraded=True)
 
 
 @dataclass
 class RetrievalResponse:
     query_id: int
-    item_ids: np.ndarray
-    scores: np.ndarray
-    latency_s: float
-    ce_calls: int                              # planned budget (upper bound)
+    item_ids: Optional[np.ndarray] = None      # None on status="error"
+    scores: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+    ce_calls: int = 0                          # planned budget (upper bound)
     measured_ce_calls: Optional[int] = None    # scorer-measured, per batch row
     cache_hits: Optional[int] = None           # pairs served from cache (batch)
+    status: str = "ok"                         # "ok" | "error"
+    degraded: bool = False                     # deadline cut the round loop;
+                                               # results are the anytime top-k
+    rounds_completed: Optional[int] = None     # rounds actually executed
+    error: Optional[str] = None                # failure detail (status="error")
 
 
 class AdaCURService:
@@ -161,6 +170,11 @@ class AdaCURService:
         self.deterministic = deterministic
         self._key = jax.random.PRNGKey(seed)
         self._pending: List[RetrievalRequest] = []
+        # one lock over queue + index mutation + flush: submit()/poll() from
+        # request threads may race swap_index() from a control thread, and a
+        # batch must be popped, searched, and answered under the index that
+        # admitted it (reentrant: swap_index drains via flush)
+        self._lock = threading.RLock()
 
     @property
     def scorer_stats(self) -> Optional[ScorerStats]:
@@ -181,12 +195,13 @@ class AdaCURService:
                 "from_index); this retriever was built on a bare r_anc and "
                 "would keep searching the old scores"
             )
-        drained: List[RetrievalResponse] = []
-        while self._pending:
-            drained += self.flush()
-        self.index = index
-        self.retriever.index = index
-        return drained
+        with self._lock:
+            drained: List[RetrievalResponse] = []
+            while self._pending:
+                drained += self.flush()
+            self.index = index
+            self.retriever.index = index
+            return drained
 
     def _due(self) -> bool:
         if not self._pending:
@@ -199,15 +214,17 @@ class AdaCURService:
 
     def submit(self, req: RetrievalRequest) -> Optional[List[RetrievalResponse]]:
         """Queue a request; returns responses when a batch fires."""
-        self._pending.append(req)
-        return self.flush() if self._due() else None
+        with self._lock:
+            self._pending.append(req)
+            return self.flush() if self._due() else None
 
     def poll(self) -> List[RetrievalResponse]:
         """Deadline check for stragglers: flush if the oldest queued request
         has waited past ``max_wait_s``.  Call from the serving event loop —
         without this, a lone queued request was only served when *another*
         request happened to arrive."""
-        return self.flush() if self._due() else []
+        with self._lock:
+            return self.flush() if self._due() else []
 
     def _bucket(self, n: int) -> int:
         for b in self.batch_buckets:
@@ -216,9 +233,36 @@ class AdaCURService:
         return self.batch_buckets[-1]
 
     def flush(self) -> List[RetrievalResponse]:
-        if not self._pending:
-            return []
-        batch, self._pending = self._pending[: self.max_batch], self._pending[self.max_batch :]
+        with self._lock:
+            if not self._pending:
+                return []
+            batch, self._pending = self._pending[: self.max_batch], self._pending[self.max_batch :]
+            try:
+                return self._flush_batch(batch)
+            except Exception as e:  # noqa: BLE001 — the flush boundary
+                # A scorer exception (pure_callback -> XlaRuntimeError, or a
+                # host scorer raising eagerly) fails exactly this batch: each
+                # popped request gets a terminal error response, the rest of
+                # the queue and the service loop keep running.
+                msg = f"{type(e).__name__}: {e}"
+                try:
+                    # drain the poisoned effects token of the failed callback
+                    # so it does not resurface at the next barrier/atexit
+                    jax.effects_barrier()
+                except Exception:  # noqa: BLE001
+                    pass
+                now = time.monotonic()
+                return [
+                    RetrievalResponse(
+                        query_id=r.query_id,
+                        latency_s=now - r.arrival_t,
+                        status="error",
+                        error=msg,
+                    )
+                    for r in batch
+                ]
+
+    def _flush_batch(self, batch: List[RetrievalRequest]) -> List[RetrievalResponse]:
         n_valid = len(batch)
         bucket = self._bucket(n_valid)
         # partial fill: pad to the static bucket by repeating the last row;
@@ -232,10 +276,19 @@ class AdaCURService:
         kw = {}
         if self.candidate_fn is not None:
             kw["candidate_idx"] = self.candidate_fn(qids)
+        # anytime serving: an armed deadline is batch-global (one round loop
+        # serves all rows), so the tightest request deadline governs
+        holder = getattr(self.retriever, "deadline", None)
+        budgets = [r.deadline_t for r in batch if r.deadline_t is not None]
+        if budgets and holder is not None:
+            kw["deadline_t"] = min(budgets)
         before = self.scorer_stats
         before = before.copy() if before is not None else None
         res = self.retriever.search(qids, sub, **kw)
         res = jax.block_until_ready(res)
+        degraded = bool(holder.fired) if "deadline_t" in kw else False
+        rounds = res.rounds_done
+        rounds = int(np.asarray(rounds)) if rounds is not None else None
         measured = cache_hits = None
         if before is not None:
             delta = self.scorer_stats - before
@@ -264,6 +317,8 @@ class AdaCURService:
                     ce_calls=res.ce_calls,
                     measured_ce_calls=measured,
                     cache_hits=cache_hits,
+                    degraded=degraded,
+                    rounds_completed=rounds,
                 )
             )
         return out
@@ -275,10 +330,11 @@ def make_retriever(
     score_fn: Callable,
     cfg: AdaCURConfig,
     anchor_key: Optional[jax.Array] = None,
+    anytime: bool = False,
 ) -> Retriever:
     """CLI retriever factory: every method consumes the same AnchorIndex."""
     if kind == "adacur":
-        return AdaCURRetriever.from_index(index, score_fn, cfg)
+        return AdaCURRetriever.from_index(index, score_fn, cfg, anytime=anytime)
     if kind == "anncur":
         if index.anchor_item_pos is None:
             index = index.with_anchors(
