@@ -9,7 +9,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.approx_topk import quant
 from repro.kernels.approx_topk.ops import approx_topk_op
+from repro.kernels.approx_topk.persistent import persistent_round_op
 from repro.kernels.approx_topk.ref import approx_topk_reference
 from repro.kernels.embedding_bag.ops import embedding_bag_op
 from repro.kernels.embedding_bag.ref import embedding_bag_reference
@@ -46,6 +48,34 @@ def run(quiet: bool = False):
     out_bytes = bq * (n // 4096) * kk * 8
     emit("kernels/approx_topk_N100k", us_pal,
          f"ref_us={us_ref:.0f};hbm_roundtrip_saved={scores_bytes / out_bytes:.1f}x")
+
+    # persistent round: sample + provisional-monitor lists in ONE payload
+    # sweep, per payload dtype.  Staged cost = two approx_topk sweeps (the
+    # monitored-loop shape); traffic reduction = the second payload pass
+    mask = jnp.zeros((bq, n), bool)
+    for dt in ("float32", "int8", "int4") + (("fp8",) if quant.fp8_supported() else ()):
+        payload = r if dt == "float32" else quant.quantize_ranc(r, 4096, code_dtype=dt)
+        noise = jax.random.gumbel(ks[2], (bq, n))
+
+        def staged():
+            s = approx_topk_op(e_q, payload, anchors, kk, tile=4096,
+                               interpret=True, noise=noise)
+            p = approx_topk_op(e_q, payload, None, kk, tile=4096,
+                               interpret=True, mask=mask)
+            return s, p
+
+        _, us_staged = timed(staged, warmup=1)
+        _, us_per = timed(
+            lambda: persistent_round_op(
+                e_q, payload, k_sample=kk, k_prov=kk, anchors=anchors,
+                noise=noise, prov_mask=mask, tile=4096, interpret=True,
+            ),
+            warmup=1,
+        )
+        pass_bytes = payload.nbytes
+        emit(f"kernels/persistent_round_N100k_{dt}", us_per,
+             f"staged2pass_us={us_staged:.0f};payload_pass_saved="
+             f"{pass_bytes / 1e6:.1f}MB")
 
     # embedding bag: gathered rows never hit HBM
     rows, dim, bb, hh = 100_000, 128, 256, 8

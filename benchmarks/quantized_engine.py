@@ -3,31 +3,52 @@
 For each corpus size N this records, on the same synthetic CE domain and
 the same seeds:
 
-- **index bytes**: the R_anc payload footprint, fp32 vs int8 (codes +
-  per-tile scales; the int8 ratio lands at ~0.25), plus the engine's
-  per-search state slabs;
-- **per-round latency**: the marginal adaptive-round cost of the fused
-  engine ((t[n_rounds] - t[1]) / (n_rounds - 1), interleaved medians —
-  the same protocol as BENCH_engine.json), fp32 vs int8.  Both paths use
-  the engine's default ``fused_tile`` byte budget; the int8 payload
-  streams 4x the columns per tile in that budget (``_effective_tile``),
-  which is where the ~4x byte reduction becomes wall-clock;
-- **recall@{1,10} parity**: retrieval quality of the int8 engine against
-  brute-force ground truth, next to the fp32 engine on identical seeds —
-  quantizing R_anc perturbs the *approximation* that proposes candidates,
-  never the exact CE scores that rank them, so recall@10 must not degrade
-  by 0.005 absolute at N=100k (asserted in CI).  Empirically the int8
-  engine retrieves *better* than fp32 on this domain (monotone in
-  quantization coarseness: fp32 < bf16 < int8, fused == dense exactly for
-  each payload): the rounding noise both regularizes the ill-conditioned
-  pinv of correlated adaptive anchors (cf. ``pinv_rcond``) and adds the
-  anchor diversity the paper's §3.2 oracle study motivates.
+- **index bytes**: the R_anc payload footprint per payload dtype —
+  fp32 vs the coded encodings (codes + per-tile scales).  int8 and
+  fp8-e4m3 land at ~0.25x fp32; packed int4 (two codes per byte) at
+  ~0.125x, under the 0.15 CI gate;
+- **per-round latency** (staged kernel): the marginal adaptive-round cost
+  of the fused engine ((t[n_rounds] - t[1]) / (n_rounds - 1), interleaved
+  medians — the same protocol as BENCH_engine.json), per payload dtype.
+  All paths use the engine's default ``fused_tile`` byte budget; a coded
+  payload streams 4x (int8/fp8) or 8x (int4) the columns per tile in that
+  budget (``_effective_tile``), which is where the byte reduction becomes
+  wall-clock;
+- **persistent vs staged round kernel**: the same marginal-per-round
+  protocol under the *monitored* loop (``early_exit_tol`` armed, so every
+  round also runs the provisional-top-k convergence probe).  The staged
+  kernel streams the payload twice per monitored round (sample sweep +
+  monitor sweep); the persistent kernel software-pipelines round r+1's
+  sample into round r's monitor sweep — one payload pass per round.  Its
+  rankings are BIT-identical to staged (asserted in tests), so no recall
+  column: only the latency ratio.  Dequant is the work the fusion halves,
+  so the win grows with payload coarseness (measured at N=100k on this
+  host: int4 0.80x, int8 0.89x, fp32 0.97x, fp8 ~1.0x — fp8 decode is
+  emulated casts on CPU); CI gates int4 <= 0.9 and fp32 <= 1.05 (a
+  no-regression canary: with no dequant to halve, fusion only saves the
+  second payload read);
+- **recall@{1,10} parity**: retrieval quality per payload dtype against
+  brute-force ground truth on identical seeds — quantizing R_anc perturbs
+  the *approximation* that proposes candidates, never the exact CE scores
+  that rank them.  int8 must not degrade recall@10 by 0.005 absolute at
+  N=100k (asserted in CI; it currently *gains* — the rounding noise both
+  regularizes the ill-conditioned pinv of correlated adaptive anchors
+  (cf. ``pinv_rcond``) and adds the anchor diversity the paper's §3.2
+  oracle study motivates).  The sub-int8 codes sit past that noise
+  optimum and TRADE recall for bytes on this domain (measured at N=100k:
+  fp8 ~ -0.09 @10 vs fp32; int4 ~ -0.4 vs int8 — per-(row,tile) blocked
+  scales, NF4 codebooks and MSE-optimal clipping were all measured and
+  recover at most ~0.1 of it, because top-k retrieval lives on the score
+  *tails* that coarse grids flatten).  Their CI checks are calibrated
+  regression canaries (bit-level corruption of packed codes or scales
+  drives recall toward 0, far below the floors), not parity claims; the
+  README table carries the measured trade-off.
 
   PYTHONPATH=src python -m benchmarks.quantized_engine [--fast|--full|--ci]
 
 ``--fast``: N=10k only.  ``--ci``: N in {10k, 100k}.  ``--full`` adds the
 million-item point (fp32 R_anc alone is ~0.5 GB at k_q=128 — exactly the
-payload the quantized path is for).
+payload the sub-int8 path is for: the int4 copy is ~64 MB).
 """
 
 from __future__ import annotations
@@ -46,6 +67,7 @@ from repro.core.engine import AdaCURRetriever, engine_slab_bytes
 from repro.core.index import AnchorIndex
 from repro.core.scorer import SyntheticScorer
 from repro.data.synthetic import make_synthetic_ce
+from repro.kernels.approx_topk import quant
 
 from .common import emit
 
@@ -53,6 +75,11 @@ K_Q = 128
 N_EVAL_Q = 100
 PAYLOAD_TILE = 512
 RECALL_SEEDS = (1, 2, 3)
+CODED = ("int8", "int4", "fp8")
+
+
+def _dtypes():
+    return ["float32"] + [d for d in CODED if d != "fp8" or quant.fp8_supported()]
 
 
 def _median(xs):
@@ -68,6 +95,31 @@ def _ground_truth_topk(ce, eval_q, n_items: int, k: int, chunk: int = 16):
     return jnp.concatenate(out, axis=0)
 
 
+def _time_marginal(rets: dict, queries, key, n_rounds: int, reps: int):
+    """Interleaved medians of full vs single-round wall clock per tag ->
+    (marginal per-round ms, full-call ms).  Interleaving the tags means
+    load drift hits every path equally."""
+    for ret in rets.values():           # compile all executables up front
+        jax.block_until_ready(ret.search(queries, key))
+        jax.block_until_ready(ret.search(queries, key, n_rounds=1))
+    samples = {tag: {"full": [], "r1": []} for tag in rets}
+    for _ in range(reps):
+        for tag, ret in rets.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(ret.search(queries, key))
+            samples[tag]["full"].append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            jax.block_until_ready(ret.search(queries, key, n_rounds=1))
+            samples[tag]["r1"].append(time.perf_counter() - t0)
+    per_round, call_ms = {}, {}
+    for tag in rets:
+        full = _median(samples[tag]["full"]) * 1e3
+        r1 = _median(samples[tag]["r1"]) * 1e3
+        call_ms[tag] = round(full, 3)
+        per_round[tag] = round(max(full - r1, 0.0) / (n_rounds - 1), 3)
+    return per_round, call_ms
+
+
 def bench_size(
     n_items: int,
     batch: int = 256,
@@ -75,12 +127,15 @@ def bench_size(
     n_rounds: int = 5,
     reps: int = 7,
 ) -> dict:
+    dtypes = _dtypes()
     ce = make_synthetic_ce(
         jax.random.PRNGKey(0), n_queries=K_Q + N_EVAL_Q, n_items=n_items
     )
     r_anc = ce.full_matrix(jnp.arange(K_Q))
     index32 = AnchorIndex.from_r_anc(r_anc, anchor_query_ids=jnp.arange(K_Q))
-    index8 = index32.quantize("int8", tile=PAYLOAD_TILE)
+    indexes = {"float32": index32}
+    for dt in dtypes[1:]:
+        indexes[dt] = index32.quantize(dt, tile=PAYLOAD_TILE)
     del r_anc
     score_fn = SyntheticScorer(ce)
     eval_q = jnp.arange(K_Q, K_Q + N_EVAL_Q)
@@ -91,76 +146,103 @@ def bench_size(
         k_anchor=budget // 2, n_rounds=n_rounds, budget_ce=budget,
         strategy="topk", k_retrieve=10, loop_mode="fori", use_fused_topk=True,
     )
-    paths = {
-        "float32": (index32, base),
-        "int8": (index8, replace(base, payload_dtype="int8",
-                                 payload_tile=PAYLOAD_TILE)),
-    }
+
+    def cfg_for(dt, **kw):
+        extra = {} if dt == "float32" else dict(
+            payload_dtype=dt, payload_tile=PAYLOAD_TILE
+        )
+        return replace(base, **extra, **kw)
+
+    # ---- staged dtype sweep (the historical protocol, now per dtype) ------
     rets = {
-        tag: AdaCURRetriever.from_index(idx, score_fn, cfg)
-        for tag, (idx, cfg) in paths.items()
+        dt: AdaCURRetriever.from_index(indexes[dt], score_fn, cfg_for(dt))
+        for dt in dtypes
     }
-    for ret in rets.values():           # compile both executables up front
-        jax.block_until_ready(ret.search(queries, key))
-        jax.block_until_ready(ret.search(queries, key, n_rounds=1))
+    per_round, call_ms = _time_marginal(rets, queries, key, n_rounds, reps)
+    per_round["ratio"] = {
+        dt: round(per_round[dt] / max(per_round["float32"], 1e-9), 3)
+        for dt in dtypes[1:]
+    }
 
-    # interleave the two payloads so load drift hits both equally; the
-    # marginal adaptive round isolates the per-round payload stream
-    samples = {tag: {"full": [], "r1": []} for tag in rets}
-    for _ in range(reps):
-        for tag, ret in rets.items():
-            t0 = time.perf_counter()
-            jax.block_until_ready(ret.search(queries, key))
-            samples[tag]["full"].append(time.perf_counter() - t0)
-            t0 = time.perf_counter()
-            jax.block_until_ready(ret.search(queries, key, n_rounds=1))
-            samples[tag]["r1"].append(time.perf_counter() - t0)
+    # ---- persistent vs staged under the monitored loop --------------------
+    # early_exit_tol arms the provisional-top-k probe every round; the
+    # tiny tolerance means the loop only stops on EXACT top-k convergence,
+    # and since the two kernels' rankings are bit-identical they always
+    # run the same number of rounds — the ratio is pure kernel speed
+    round_kernel = {}
+    mon_rets = {}
+    for dt in dtypes:
+        for rk in ("staged", "persistent"):
+            mon_rets[(dt, rk)] = AdaCURRetriever.from_index(
+                indexes[dt], score_fn,
+                cfg_for(dt, early_exit_tol=1e-6, round_kernel=rk),
+            )
+    mon_round, _ = _time_marginal(
+        mon_rets, queries, key, n_rounds, max(reps - 2, 3)
+    )
+    for dt in dtypes:
+        st, pe = mon_round[(dt, "staged")], mon_round[(dt, "persistent")]
+        round_kernel[dt] = {
+            "staged": st,
+            "persistent": pe,
+            "ratio": round(pe / max(st, 1e-9), 3),
+        }
 
-    per_round, call_ms = {}, {}
-    for tag in rets:
-        full = _median(samples[tag]["full"]) * 1e3
-        r1 = _median(samples[tag]["r1"]) * 1e3
-        call_ms[tag] = round(full, 3)
-        per_round[tag] = round(max(full - r1, 0.0) / (n_rounds - 1), 3)
-
-    # recall parity on the same seeds: exact-CE-ranked retrieval vs brute
-    # force, pooled over RECALL_SEEDS x N_EVAL_Q queries per payload
+    # ---- recall parity on the same seeds (staged kernel; the persistent
+    # kernel's rankings are bit-identical, so one sweep covers both) --------
     gt = _ground_truth_topk(ce, eval_q, n_items, 10)
     recall = {}
-    for tag, ret in rets.items():
+    for dt in dtypes:
         r1s, r10s = [], []
         for seed in RECALL_SEEDS:
-            res = ret.search(eval_q, jax.random.PRNGKey(seed))
+            res = rets[dt].search(eval_q, jax.random.PRNGKey(seed))
             r1s.append(float(retrieval.topk_recall(res.topk_idx, gt[:, :1], 1)))
             r10s.append(float(retrieval.topk_recall(res.topk_idx, gt, 10)))
-        recall[tag] = {
+        recall[dt] = {
             "@1": round(float(np.mean(r1s)), 4),
             "@10": round(float(np.mean(r10s)), 4),
         }
 
-    bytes32 = int(index32.payload_nbytes)
-    bytes8 = int(index8.payload_nbytes)
+    nbytes = {dt: int(indexes[dt].payload_nbytes) for dt in dtypes}
     entry = {
         "index_bytes": {
-            "float32": bytes32,
-            "int8": bytes8,
-            "ratio": round(bytes8 / bytes32, 4),
+            **nbytes,
+            "ratio": {
+                dt: round(nbytes[dt] / nbytes["float32"], 4) for dt in dtypes[1:]
+            },
         },
-        "engine_slab_bytes": engine_slab_bytes(base, batch, n_items, K_Q)["total"],
+        "engine_slab_bytes": {
+            dt: engine_slab_bytes(
+                cfg_for(dt), batch, n_items, K_Q, payload=indexes[dt].r_anc
+            )["total"]
+            for dt in dtypes
+        },
         "call_ms": call_ms,
-        "per_round_ms": {
-            **per_round,
-            "ratio": round(per_round["int8"] / max(per_round["float32"], 1e-9), 3),
-        },
+        "per_round_ms": per_round,
+        "round_kernel_per_round_ms": round_kernel,
         "recall": recall,
-        "recall10_delta": round(
-            recall["int8"]["@10"] - recall["float32"]["@10"], 4
-        ),
+        "recall_delta_vs_fp32": {
+            dt: {
+                k: round(recall[dt][k] - recall["float32"][k], 4)
+                for k in ("@1", "@10")
+            }
+            for dt in dtypes[1:]
+        },
+        "recall_delta_vs_int8": {
+            dt: {
+                k: round(recall[dt][k] - recall["int8"][k], 4)
+                for k in ("@1", "@10")
+            }
+            for dt in dtypes[1:] if dt != "int8"
+        },
+        # kept for older BENCH readers: int8-vs-fp32 recall@10 delta
+        "recall10_delta": round(recall["int8"]["@10"] - recall["float32"]["@10"], 4),
     }
     emit(
         f"quant/N{n_items}", per_round["int8"] * 1e3,
-        f"round_ratio={entry['per_round_ms']['ratio']};"
-        f"bytes_ratio={entry['index_bytes']['ratio']};"
+        f"int8_round_ratio={entry['per_round_ms']['ratio']['int8']};"
+        f"int4_bytes_ratio={entry['index_bytes']['ratio'].get('int4')};"
+        f"persistent_ratio_int4={round_kernel.get('int4', {}).get('ratio')};"
         f"recall10_delta={entry['recall10_delta']}",
     )
     return entry
@@ -179,6 +261,7 @@ def run(
         "n_rounds": n_rounds,
         "k_q": K_Q,
         "payload_tile": PAYLOAD_TILE,
+        "payload_dtypes": _dtypes(),
         "recall_seeds": list(RECALL_SEEDS),
         "n_eval_queries": N_EVAL_Q,
         "sizes": {},
@@ -190,12 +273,29 @@ def run(
         )
     at = snapshot["sizes"].get("100000")
     if at is not None:
+        ratio = at["index_bytes"]["ratio"]
+        d8 = at["recall_delta_vs_fp32"]["int8"]
+        d4 = at["recall_delta_vs_int8"].get("int4", {})
+        rk = at["round_kernel_per_round_ms"]
         snapshot["checks_at_100k"] = {
-            "index_bytes_ratio_le_0.3": at["index_bytes"]["ratio"] <= 0.3,
-            "per_round_ratio_le_0.9": at["per_round_ms"]["ratio"] <= 0.9,
-            # delta = int8 - fp32; the payload must not LOSE recall (it
-            # currently gains some — see module docstring)
-            "recall10_degradation_lt_0.005": at["recall10_delta"] > -0.005,
+            "int8_bytes_ratio_le_0.3": ratio["int8"] <= 0.3,
+            "int4_bytes_ratio_le_0.15": ratio.get("int4", 1.0) <= 0.15,
+            "int8_per_round_ratio_le_0.9": at["per_round_ms"]["ratio"]["int8"] <= 0.9,
+            # int8 must not LOSE recall beyond 0.005 absolute (it gains)
+            "int8_recall10_degradation_lt_0.005": d8["@10"] > -0.005,
+            # sub-int8 canary floor: measured int4 @10 is ~0.43 vs int8
+            # ~0.93 on this domain (see docstring); packed-nibble or scale
+            # corruption lands near 0, far below the floor
+            "int4_recall10_canary_floor": d4.get("@10", 0.0) > -0.65,
+            # the fusion halves DEQUANT, so the win scales with payload
+            # coarseness (see docstring); gate the coded int4 win and pin
+            # fp32 as a no-regression canary
+            "int4_persistent_round_ratio_le_0.9": (
+                rk.get("int4", {"ratio": 0.0})["ratio"] <= 0.9
+            ),
+            "fp32_persistent_round_no_regression": (
+                rk["float32"]["ratio"] <= 1.05
+            ),
         }
     if json_path:
         with open(json_path, "w") as fh:

@@ -7,10 +7,12 @@ Builds a 10K-item domain, wraps the offline scores in the one
 :class:`AnchorIndex` artifact (build/save/load/shard/mutate lives there),
 then runs budget-matched retrieval with the paper's method and the
 fixed-anchor baseline — both as configurations of the unified Retriever
-engine — and prints Top-k-Recall.  ``--payload-dtype int8`` demonstrates
-the quantized payload end to end: the index stores per-tile int8 codes +
-fp32 scales (~4x smaller) and the fused kernel dequantizes tile-by-tile
-in registers."""
+engine — and prints Top-k-Recall.  ``--payload-dtype int8`` (or ``int4`` /
+``fp8``) demonstrates the quantized payload end to end: the index stores
+per-tile codes + fp32 scales (int8/fp8 ~4x smaller, packed int4 ~8x) and
+the fused kernel dequantizes tile-by-tile in registers.
+``--round-kernel persistent`` fuses each round's estimate, Gumbel top-k
+and early-exit monitor into one payload sweep."""
 
 import argparse
 
@@ -27,9 +29,15 @@ from repro.data.synthetic import make_synthetic_ce
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--payload-dtype", choices=("float32", "bfloat16", "int8"),
+    ap.add_argument("--payload-dtype",
+                    choices=("float32", "bfloat16", "int8", "int4", "fp8"),
                     default="float32",
-                    help="storage/streaming dtype of the R_anc payload")
+                    help="storage/streaming dtype of the R_anc payload "
+                         "(int8/fp8 ~4x smaller, packed int4 ~8x)")
+    ap.add_argument("--round-kernel", choices=("staged", "persistent"),
+                    default="staged",
+                    help="persistent: one fused payload sweep per round "
+                         "(bit-identical rankings to staged)")
     ap.add_argument("--first-stage", choices=("none", "de", "bm25"),
                     default="none",
                     help="add a multi-stage hybrid row: first-stage "
@@ -59,7 +67,8 @@ def main():
 
     cfg = AdaCURConfig(k_anchor=100, n_rounds=5, budget_ce=budget,
                        strategy="topk", k_retrieve=100, loop_mode="fori",
-                       use_fused_topk=True, payload_dtype=args.payload_dtype)
+                       use_fused_topk=True, payload_dtype=args.payload_dtype,
+                       round_kernel=args.round_kernel)
     ret = AdaCURRetriever.from_index(index, score_fn, cfg)
     res = ret.search(test_q, jax.random.PRNGKey(1))
     rep = retrieval.evaluate_result("ADACUR(TopK,5 rounds)", res, exact)

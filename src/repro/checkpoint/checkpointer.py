@@ -76,7 +76,13 @@ class Checkpointer:
             manifest = {"step": step, "leaves": {}}
             for key, leaf in flat.items():
                 fn = key.replace(SEP, "__") + ".npy"
-                np.save(os.path.join(tmp, fn), leaf)
+                # ml_dtypes leaves (bfloat16, float8_*) are custom numpy
+                # dtypes (kind 'V') that np.save writes as raw void bytes —
+                # the dtype would not survive np.load.  Write the byte view
+                # instead; the manifest keeps the logical dtype/shape and
+                # restore views the bytes back.
+                to_disk = leaf.view(np.uint8) if leaf.dtype.kind == "V" else leaf
+                np.save(os.path.join(tmp, fn), to_disk)
                 manifest["leaves"][key] = {
                     "file": fn,
                     "shape": list(leaf.shape),
@@ -127,6 +133,9 @@ class Checkpointer:
         for key, ref in flat_like.items():
             meta = manifest["leaves"][key]
             arr = np.load(os.path.join(path, meta["file"]))
+            want = np.dtype(meta["dtype"])
+            if want.kind == "V" and arr.dtype != want:
+                arr = arr.view(want)  # byte view written by save (ml_dtypes)
             if tuple(arr.shape) != tuple(ref.shape):
                 raise ValueError(
                     f"checkpoint leaf {key} shape {arr.shape} != expected {ref.shape}"

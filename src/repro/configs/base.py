@@ -247,16 +247,32 @@ class AdaCURConfig:
     # provisional top-k_retrieve candidate set overlap reaches 1 - tol.
     # 0.0 always runs the full round budget.
     early_exit_tol: float = 0.0
+    # How the per-round item-axis work is staged (requires use_fused_topk):
+    # "staged": one fused approx_topk_op pass per consumer — anchor sampling,
+    #   and (in monitored/early-exit mode) a second pass for the provisional
+    #   top-k — each re-streaming the payload from HBM.
+    # "persistent": the whole round runs as ONE payload sweep through
+    #   kernels/approx_topk/persistent.py — dequant + estimate GEMM + Gumbel
+    #   top-k sampling + provisional top-k fused, with the round state
+    #   (e_q, running top-k accumulators) VMEM-resident across item tiles.
+    #   The monitored early-exit loop is additionally software-pipelined:
+    #   round r+1's anchor sample and round r's provisional monitor share
+    #   one sweep, halving payload passes per monitored round.  Rankings are
+    #   bit-identical to "staged" in every loop mode (asserted by the parity
+    #   and property suites).
+    round_kernel: str = "staged"     # "staged" | "persistent"
     # Storage/streaming dtype of the R_anc payload the item-axis hot path
     # reads every round.  "int8" stores per-item-tile symmetric codes + fp32
     # scales (~4x fewer bytes; the fused kernel dequantizes tile-by-tile in
-    # registers); "bfloat16" halves the payload with no extra state.  An
-    # index-backed retriever quantizes its AnchorIndex once at from_index;
-    # a bare-r_anc retriever converts the operand inside the trace (per
-    # call — prefer the index path at scale).  Exact CE scores, the pinv
-    # state and the final ranking stay fp32 throughout.
-    payload_dtype: str = "float32"   # "float32" | "bfloat16" | "int8"
-    payload_tile: int = 512          # item-axis quantization tile (int8)
+    # registers); "int4" packs two codes per byte (0.125x fp32 bytes) and
+    # "fp8" stores float8_e4m3 codes (platform-gated); "bfloat16" halves the
+    # payload with no extra state.  An index-backed retriever quantizes its
+    # AnchorIndex once at from_index; a bare-r_anc retriever converts the
+    # operand inside the trace (per call — prefer the index path at scale).
+    # Exact CE scores, the pinv state and the final ranking stay fp32
+    # throughout.
+    payload_dtype: str = "float32"   # "float32"|"bfloat16"|"int8"|"int4"|"fp8"
+    payload_tile: int = 512          # item-axis quantization tile (quantized)
     # Regularized pinv: adaptively-selected anchors are correlated, so the
     # anchor column matrix conditions much worse than a random subset
     # (measured ~13500 vs ~210); truncating tiny singular values keeps the
@@ -274,13 +290,25 @@ class AdaCURConfig:
             raise ValueError(f"unknown loop_mode '{self.loop_mode}'")
         if self.early_exit_tol > 0.0 and self.loop_mode != "fori":
             raise ValueError("early_exit_tol requires loop_mode='fori'")
-        if self.payload_dtype not in ("float32", "bfloat16", "int8"):
+        if self.payload_dtype not in (
+            "float32", "bfloat16", "int8", "int4", "fp8"
+        ):
             raise ValueError(
                 f"unknown payload_dtype '{self.payload_dtype}' "
-                "(float32|bfloat16|int8)"
+                "(float32|bfloat16|int8|int4|fp8)"
             )
         if self.payload_tile <= 0:
             raise ValueError("payload_tile must be positive")
+        if self.payload_dtype == "int4" and self.payload_tile % 2:
+            raise ValueError("int4 payloads need an even payload_tile "
+                             "(two codes pack per byte)")
+        if self.round_kernel not in ("staged", "persistent"):
+            raise ValueError(f"unknown round_kernel '{self.round_kernel}'")
+        if self.round_kernel == "persistent" and not self.use_fused_topk:
+            raise ValueError(
+                "round_kernel='persistent' fuses the round into the Pallas "
+                "sweep; it requires use_fused_topk=True"
+            )
 
 
 def replace(cfg, **kw):

@@ -14,8 +14,9 @@ the engine:
 - candidate-subset search — :func:`union_candidates` unions a batch's
   shortlists into a sorted, padded position vector *inside the trace*, the
   payload columns at those positions are gathered into a compact sub-index
-  (:func:`quant.subset_columns` — int8 codes keep their bytes and carry
-  per-column source-tile scales, so no re-quantization), and the engine
+  (:func:`quant.subset_columns` — coded payloads (int8 / packed int4 / fp8)
+  keep their code bytes and carry per-column source-tile scales, so no
+  re-quantization), and the engine
   runs over the sub-index with ``pos_map`` remapping every noise draw to
   the original corpus coordinates.  The subset search is **bit-identical**
   to the same engine search over the full corpus with an ``eligible``

@@ -112,6 +112,15 @@ def _bordered_blocks(
     k1 = jnp.linalg.solve(gram + ridge * scale * eye, c.T)
     # rank-deficient branch: K2 = (I + DᵀD)⁻¹ Dᵀ P
     k2 = jnp.linalg.solve(eye + d.T @ d, d.T @ p)
+    # DUPLICATE new columns (coarse payload grids — int4 especially — make
+    # exact column collisions likely) leave gram singular with a large
+    # trace, and the ridge underflows against the fp32 rounding of the
+    # diagonal add, so LU turns the whole solve non-finite.  Each c column
+    # has a healthy norm there, so the w-blend below would keep the NaNs;
+    # fall back to the (always finite) Greville branch instead.  Finite
+    # solves pass through untouched, so healthy updates keep their exact
+    # bits.
+    k1 = jnp.where(jnp.isfinite(k1), k1, k2)
     # per-column blend: column j uses branch 1 iff ‖c_j‖² is non-negligible
     # relative to ‖b_j‖².
     c_norm = jnp.sum(c * c, axis=0)

@@ -59,6 +59,7 @@ from ..compat import shard_map
 from ..configs.base import AdaCURConfig, replace
 from ..kernels.approx_topk import quant
 from ..kernels.approx_topk.ops import approx_topk_op
+from ..kernels.approx_topk.persistent import persistent_round_op
 from ..kernels.approx_topk.quant import QuantizedRanc
 from . import cur, sampling
 from .adacur import AdaCURResult, ScoreFn
@@ -415,7 +416,9 @@ def _effective_tile(cfg: AdaCURConfig, r_anc) -> int:
     if not cfg.fused_interpret:
         return cfg.fused_tile
     dtype = quant.payload_dtype_of(r_anc)
-    if dtype == "int8":
+    if dtype == "int4":
+        return cfg.fused_tile * 8
+    if dtype in ("int8", "fp8"):
         return cfg.fused_tile * 4
     if dtype == "bfloat16":
         return cfg.fused_tile * 2
@@ -439,6 +442,14 @@ def _fused_suppress(
     return dict(anchors=state.anchor_idx, mask=None)
 
 
+def _bcast_mask(invalid, b: int, n: int):
+    """Normalize an (N,) / (1, N) / (B, N) invalid mask to (B, N)."""
+    if invalid is None:
+        return None
+    inv = invalid if invalid.ndim == 2 else invalid[None, :]
+    return jnp.broadcast_to(inv, (b, n))
+
+
 def _sample_round(
     cfg: AdaCURConfig,
     key: jax.Array,
@@ -448,55 +459,112 @@ def _sample_round(
     n_valid: Optional[int],
     ctx: ShardCtx,
     force_mask: bool = False,
-) -> jax.Array:
+    monitor: Optional[tuple] = None,
+):
     """One adaptive round's anchor pick (Alg. 3) — dense or fused, over this
     shard's payload slab; returns GLOBAL item ids.
 
-    ``r_anc`` is any payload type (fp32/bf16 array or int8 QuantizedRanc);
-    both branches dequantize per column, the dense one via
-    :func:`quant.matmul`, the fused one inside the kernel tiles.  On a
-    sharded context the per-shard candidates go through the tie-break
-    merge (:func:`_merge_topk`)."""
+    ``r_anc`` is any payload type (fp32/bf16 array or quantized
+    int8/int4/fp8 QuantizedRanc); both branches dequantize per column, the
+    dense one via :func:`quant.matmul`, the fused one inside the kernel
+    tiles.  On a sharded context the per-shard candidates go through the
+    tie-break merge (:func:`_merge_topk`).
+
+    ``monitor=(m, invalid)`` additionally returns the provisional top-m ids
+    of the *current* ``state.e_q`` estimate (the early-exit monitor) as a
+    second value.  Under ``cfg.round_kernel='persistent'`` both lists come
+    out of ONE persistent payload sweep (:func:`persistent_round_op`)
+    whenever the sample and provisional branches share the estimate GEMM —
+    ``topk`` strategy, or ``softmax`` at temperature 1.0 (``e_q / 1.0`` is
+    bitwise ``e_q``, so the folded-temperature sample operand equals the
+    provisional one); otherwise the monitor falls back to a separate
+    :func:`_provisional_topk` pass with identical results.
+    """
     sharded = ctx.item_axes is not None
     b, n_local = state.selected.shape
     remapped = ctx.col_map is not None
+    persistent = cfg.use_fused_topk and cfg.round_kernel == "persistent"
+
+    def with_monitor(gidx):
+        if monitor is None:
+            return gidx
+        m, invalid = monitor
+        return gidx, _provisional_topk(
+            cfg, state.e_q, r_anc, m, n_valid, invalid, ctx
+        )
+
     if cfg.strategy == "random" and (sharded or remapped or cfg.use_fused_topk):
-        return _sample_random_ctx(ctx, key, state.selected, k_eff)
+        return with_monitor(_sample_random_ctx(ctx, key, state.selected, k_eff))
     if not cfg.use_fused_topk:
         s_hat = quant.matmul(state.e_q, r_anc)
         if not sharded and not remapped:
-            return sampling.sample(
+            return with_monitor(sampling.sample(
                 cfg.strategy, key, s_hat, state.selected, k_eff, cfg.softmax_temp
-            )
+            ))
         logits = sampling._masked_logits(s_hat, state.selected, cfg.softmax_temp)
         if cfg.strategy == "softmax":
             logits = logits + _noise(ctx, key, b)
-        return _local_topk_merge(ctx, logits, k_eff)
+        return with_monitor(_local_topk_merge(ctx, logits, k_eff))
     suppress = _fused_suppress(cfg, state, force_mask or sharded)
-    if cfg.strategy == "softmax":
+    tile = _effective_tile(cfg, r_anc)
+    nv = None if sharded else n_valid
+    if persistent:
+        kw = dict(
+            k_sample=k_eff, tile=tile, interpret=cfg.fused_interpret,
+            n_valid=nv, **suppress,
+        )
+        e_q = state.e_q
+        if cfg.strategy == "softmax":
+            # temp folds into e_q (scores/temp == (e_q/temp) @ R_anc), as on
+            # the staged path.  The Gumbel field is generated INSIDE the
+            # sweep from its (key, global row/col) coordinates — the (B, N)
+            # noise matrix never exists — except on a remapped candidate
+            # subset, whose scattered coordinates need the gathered field.
+            e_q = e_q / jnp.asarray(cfg.softmax_temp, e_q.dtype)
+            if remapped:
+                kw["noise"] = _noise(ctx, key, b)
+            else:
+                kw.update(
+                    noise_key=key, row_offset=ctx.row_offset,
+                    col_offset=_item_offset(ctx),
+                )
+        fuse_prov = monitor is not None and (
+            cfg.strategy == "topk" or cfg.softmax_temp == 1.0
+        )
+        if fuse_prov:
+            m, invalid = monitor
+            (v, idx), (pv, pidx) = persistent_round_op(
+                e_q, r_anc, k_prov=m,
+                prov_mask=_bcast_mask(invalid, b, n_local), **kw,
+            )
+            if not sharded:
+                return idx, pidx
+            _, gidx = _merge_topk(ctx, v, idx + _item_offset(ctx), k_eff)
+            _, pgidx = _merge_topk(ctx, pv, pidx + _item_offset(ctx), m)
+            return gidx, pgidx
+        (v, idx), _ = persistent_round_op(e_q, r_anc, **kw)
+    elif cfg.strategy == "softmax":
         # temp folds into e_q (scores/temp == (e_q/temp) @ R_anc); Gumbel
         # noise enters the kernel as an input, S_hat stays in VMEM.
         g = _noise(ctx, key, b)
         e_q = state.e_q / jnp.asarray(cfg.softmax_temp, state.e_q.dtype)
         v, idx = approx_topk_op(
-            e_q, r_anc, k=k_eff, tile=_effective_tile(cfg, r_anc),
-            interpret=cfg.fused_interpret, noise=g,
-            n_valid=None if sharded else n_valid, **suppress,
+            e_q, r_anc, k=k_eff, tile=tile,
+            interpret=cfg.fused_interpret, noise=g, n_valid=nv, **suppress,
         )
     else:
         # topk: temp > 0 is order-preserving, no noise needed
         v, idx = approx_topk_op(
-            state.e_q, r_anc, k=k_eff, tile=_effective_tile(cfg, r_anc),
-            interpret=cfg.fused_interpret,
-            n_valid=None if sharded else n_valid, **suppress,
+            state.e_q, r_anc, k=k_eff, tile=tile,
+            interpret=cfg.fused_interpret, n_valid=nv, **suppress,
         )
     if not sharded:
-        return idx
+        return with_monitor(idx)
     _, gidx = _merge_topk(ctx, v, idx + _item_offset(ctx), k_eff)
-    return gidx
+    return with_monitor(gidx)
 
 
-def _make_round_body(
+def _make_round_steps(
     scored: ScoreFn,
     r_anc: jax.Array,
     query,
@@ -506,19 +574,33 @@ def _make_round_body(
     n_valid: Optional[int],
     ctx: ShardCtx,
     force_mask: bool = False,
-) -> Callable[[jax.Array, EngineState], EngineState]:
-    """The shape-invariant adaptive round body (rounds 1..n_rounds-1).
+):
+    """The shape-invariant adaptive round, split into its two stages.
+
+    ``sample(r, state, monitor=None)`` picks round r's fresh anchors from
+    the current estimate (and optionally the provisional monitor top-k, in
+    the same persistent sweep — see :func:`_sample_round`);
+    ``apply(r, state, idx_new)`` is everything downstream of the pick — the
+    ε diversity mix, CE scoring, slab updates and the pinv/e_q refresh.
+    ``body = apply ∘ sample`` is the staged round body; the persistent
+    monitored loop software-pipelines the stages instead (round r+1's
+    ``sample`` rides round r's monitor sweep), which is legal because
+    ``sample`` only reads state that ``apply`` finalized: the composition
+    order changes, the computed values do not.
 
     ``r`` may be a python int (unrolled) or a traced int32 (fori/while).
     ``scored`` is the engine's score-once wrapper (id-mapped, one CE call
     per pair system-wide); all item ids in play are global."""
     n_rand = int(round(cfg.round_epsilon * k_s))
 
-    def body(r, state: EngineState) -> EngineState:
-        key_r = keys[r]
-        idx_new = _sample_round(
-            cfg, key_r, state, r_anc, k_s - n_rand, n_valid, ctx, force_mask
+    def sample(r, state: EngineState, monitor=None):
+        return _sample_round(
+            cfg, keys[r], state, r_anc, k_s - n_rand, n_valid, ctx,
+            force_mask, monitor=monitor,
         )
+
+    def apply(r, state: EngineState, idx_new) -> EngineState:
+        key_r = keys[r]
         if n_rand:
             # ε-greedy diversity mix (beyond-paper; see AdaCURConfig)
             sel_tmp = _mark_selected(ctx, state.selected, idx_new)
@@ -555,7 +637,27 @@ def _make_round_body(
         e_q = jnp.einsum("bk,bkq->bq", c_test, p)
         return EngineState(anchor_idx, c_test, a_buf, p, e_q, selected)
 
-    return body
+    def body(r, state: EngineState) -> EngineState:
+        return apply(r, state, sample(r, state))
+
+    return sample, apply, body
+
+
+def _make_round_body(
+    scored: ScoreFn,
+    r_anc: jax.Array,
+    query,
+    cfg: AdaCURConfig,
+    keys: jax.Array,
+    k_s: int,
+    n_valid: Optional[int],
+    ctx: ShardCtx,
+    force_mask: bool = False,
+) -> Callable[[jax.Array, EngineState], EngineState]:
+    """The staged round body — ``apply ∘ sample`` (see _make_round_steps)."""
+    return _make_round_steps(
+        scored, r_anc, query, cfg, keys, k_s, n_valid, ctx, force_mask
+    )[2]
 
 
 def _provisional_topk(
@@ -855,7 +957,7 @@ def engine_search(
         e_q = jnp.zeros((b, k_q), dtype)
     state = EngineState(anchor_idx, c_test, a_buf, p, e_q, selected)
 
-    body = _make_round_body(
+    sample_step, apply_step, body = _make_round_steps(
         scored, r_anc, query, cfg, keys, k_s, n_valid, ctx, force_mask=dyn_valid
     )
 
@@ -867,7 +969,38 @@ def engine_search(
     else:
         r_dyn = jnp.asarray(r_max if n_rounds is None else n_rounds, jnp.int32)
         r_dyn = jnp.clip(r_dyn, 1, r_max)
-        if cfg.early_exit_tol > 0.0:
+        if cfg.early_exit_tol > 0.0 and cfg.round_kernel == "persistent":
+            # software-pipelined monitored loop: round r+1's anchor sample
+            # and round r's provisional monitor ride ONE persistent payload
+            # sweep.  Legal because the sample at round r+1 reads exactly
+            # the state apply(r) finalized — the same (e_q, selected, key)
+            # the staged loop would hand it one iteration later — so every
+            # value (and rounds_done) is bit-identical to the staged loop;
+            # only the number of payload passes halves.
+            m = min(cfg.k_retrieve, n_global)
+            pending, prev = sample_step(1, state, monitor=(m, mon_invalid))
+
+            def cond(carry):
+                r, frac, _, _, _ = carry
+                go = (r < r_dyn) & (frac < 1.0 - cfg.early_exit_tol)
+                if deadline is not None:
+                    go = go & ~deadline.expired(r)
+                return go
+
+            def while_body(carry):
+                r, _, st, prev_top, pend = carry
+                st = apply_step(r, st, pend)
+                pend_next, cur_top = sample_step(
+                    r + 1, st, monitor=(m, mon_invalid)
+                )
+                hit = (cur_top[:, :, None] == prev_top[:, None, :]).any(-1)
+                return r + 1, _global_frac(ctx, hit), st, cur_top, pend_next
+
+            rounds_done, _, state, _, _ = jax.lax.while_loop(
+                cond, while_body,
+                (jnp.int32(1), jnp.float32(0.0), state, prev, pending),
+            )
+        elif cfg.early_exit_tol > 0.0:
             m = min(cfg.k_retrieve, n_global)
             prev = _provisional_topk(
                 cfg, state.e_q, r_anc, m, n_valid, mon_invalid, ctx
@@ -1032,10 +1165,17 @@ def make_engine(
 
 def _payload_specs(r_anc, item_axes: Tuple[str, ...]):
     """shard_map in_spec tree for the payload operand: codes column-sharded,
-    per-tile scales co-sharded on the same axes."""
+    per-tile scales co-sharded on the same axes.
+
+    The spec tree must carry the operand's static meta (tile, code_dtype,
+    n_cols) verbatim or the pytree structures mismatch.  Packed int4 shards
+    cleanly because shard slabs are even (whole even tiles), so the packed
+    byte axis divides exactly and the ``n_cols=-1`` "2x the packed width"
+    sentinel stays correct per shard."""
     if isinstance(r_anc, QuantizedRanc):
         return QuantizedRanc(
-            codes=P(None, item_axes), scales=P(item_axes), tile=r_anc.tile
+            codes=P(None, item_axes), scales=P(item_axes), tile=r_anc.tile,
+            code_dtype=r_anc.code_dtype, n_cols=r_anc.n_cols,
         )
     return P(None, item_axes)
 
@@ -1367,10 +1507,11 @@ class _IndexBacked:
         idx = getattr(self, "index", None)
         if idx is None or cfg.payload_dtype == "float32":
             return
-        if idx.payload_dtype in (cfg.payload_dtype, "int8"):
-            # already compliant — or already quantized, which is
-            # authoritative (mirrors quant.as_payload: the policy converts
-            # payloads UP, it never dequantizes an int8 artifact)
+        if (idx.payload_dtype == cfg.payload_dtype
+                or idx.payload_dtype in quant.CODE_DTYPES):
+            # already compliant — or already quantized (int8/int4/fp8),
+            # which is authoritative (mirrors quant.as_payload: the policy
+            # converts payloads UP, it never requantizes a coded artifact)
             return
         mesh, _ = idx._item_sharding()
         new = idx.quantize(cfg.payload_dtype, tile=cfg.payload_tile)
@@ -1666,17 +1807,25 @@ def round_body_bn_intermediates(
 def engine_slab_bytes(
     cfg: AdaCURConfig, batch: int, n_items: int, k_q: int,
     n_data_shards: int = 1, n_item_shards: int = 1,
+    payload=None,
 ) -> dict:
     """Device bytes of the engine's preallocated per-search state slabs —
     PER SHARD when a (data x items) decomposition is given.
 
-    The engine's whole working set is these six buffers (plus the payload it
-    streams); reporting them next to the index payload in BENCH_engine.json /
+    The engine's whole working set is these six buffers plus the payload it
+    streams; reporting them next to the index payload in BENCH_engine.json /
     BENCH_sharded.json tracks the memory story alongside latency as N and
     the mesh scale.  Under the SPMD engine the batch dimension divides over
     ``n_data_shards`` everywhere, and the item axis — which only the
     ``selected`` mask carries — further divides over ``n_item_shards``; the
     pinv/e_q state replicates across item shards by design.
+
+    ``payload``, when given, adds a ``"payload"`` entry with the REAL
+    per-shard byte footprint of the streamed operand — either a concrete
+    payload (fp32/bf16 array or QuantizedRanc, measured via ``nbytes`` so
+    packed int4 columns count 0.5 bytes/row, not element counts) or a
+    payload dtype string, sized analytically from ``(k_q, n_items)`` plus
+    the per-tile scale vector for coded dtypes.
     """
     k_i = cfg.budget_ce if not cfg.split_budget else cfg.k_anchor
     b = batch // n_data_shards
@@ -1688,5 +1837,11 @@ def engine_slab_bytes(
         "e_q": b * k_q * 4,
         "selected_mask": b * (n_items // n_item_shards) * 1,
     }
+    if payload is not None:
+        if isinstance(payload, str):
+            nb = quant.payload_nbytes(payload, k_q, n_items, cfg.payload_tile)
+        else:
+            nb = int(payload.nbytes)
+        slabs["payload"] = nb // n_item_shards
     slabs["total"] = sum(slabs.values())
     return slabs

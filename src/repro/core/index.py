@@ -57,12 +57,15 @@ BulkScoreFn = Callable[[jax.Array, jax.Array], jax.Array]
 # v2 adds the quantized payload (r_codes/r_scales leaves + payload meta).
 # v3 adds the optional corpus token table (item_tokens leaf) that makes the
 # index self-contained for device-resident CE scoring (DeviceCEScorer under
-# the SPMD engine).  Saves stamp the LOWEST version whose features they use
-# — a plain fp32 index keeps the v1 on-disk layout byte-for-byte, a
-# quantized one without tokens stamps v2 — so older readers keep loading
-# everything they can represent; this build reads all three.
-INDEX_FORMAT_VERSION = 3
-_READABLE_FORMAT_VERSIONS = (1, 2, 3)
+# the SPMD engine).  v4 adds sub-int8 payload encodings (packed int4 /
+# fp8-e4m3), recorded as ``payload.code_dtype`` (+ ``payload.n_cols`` for
+# packed widths) in the meta.  Saves stamp the LOWEST version whose features
+# they use — a plain fp32 index keeps the v1 on-disk layout byte-for-byte,
+# an int8-quantized one without tokens stamps v2, and only int4/fp8 payloads
+# stamp v4 — so older readers keep loading everything they can represent;
+# this build reads all four.
+INDEX_FORMAT_VERSION = 4
+_READABLE_FORMAT_VERSIONS = (1, 2, 3, 4)
 _META_FILE = "index_meta.json"
 _CKPT_STEP = 0
 
@@ -185,8 +188,9 @@ class AnchorIndex:
     array, so a retriever holding a mutated index never retraces.
     """
 
-    # (k_q, capacity) anchor-query scores: an fp32/bf16 array, or an int8
-    # QuantizedRanc payload (codes + per-item-tile scales) after quantize()
+    # (k_q, capacity) anchor-query scores: an fp32/bf16 array, or a coded
+    # QuantizedRanc payload (int8 / packed int4 / fp8 codes + per-item-tile
+    # scales) after quantize()
     r_anc: Union[jax.Array, QuantizedRanc]
     anchor_query_ids: jax.Array      # (k_q,) int32 anchor query ids
     item_ids: jax.Array              # (capacity,) int32 external ids, -1 padding
@@ -212,7 +216,8 @@ class AnchorIndex:
 
     @property
     def payload_dtype(self) -> str:
-        """Storage dtype of the R_anc payload: float32 | bfloat16 | int8."""
+        """Storage dtype of the R_anc payload:
+        float32 | bfloat16 | int8 | int4 | fp8."""
         return quant.payload_dtype_of(self.r_anc)
 
     @property
@@ -233,14 +238,17 @@ class AnchorIndex:
     def quantize(
         self, dtype: str = "int8", tile: int = quant.DEFAULT_TILE
     ) -> "AnchorIndex":
-        """Re-encode the R_anc payload (``int8`` | ``bfloat16`` | ``float32``).
+        """Re-encode the R_anc payload
+        (``int8`` | ``int4`` | ``fp8`` | ``bfloat16`` | ``float32``).
 
-        ``int8`` stores per-item-tile symmetric codes + fp32 scales (~4x
-        smaller; the fused kernel dequantizes tile-by-tile in registers).
+        The coded dtypes store per-item-tile symmetric codes + fp32 scales
+        (int8 ~4x smaller, packed int4 ~8x, fp8-e4m3 ~4x with wider dynamic
+        range; the fused kernel dequantizes tile-by-tile in registers).
         ANNCUR latents, if present, stay fp32 — they are (k_i, capacity)
         with k_i ≪ k_q and are not the memory bottleneck.  Quantizing an
-        already-int8 index with a different tile re-quantizes from the
-        dequantized codes (documented lossy; keep one tile per artifact).
+        already-coded index with a different tile or code dtype re-quantizes
+        from the dequantized codes (documented lossy; keep one encoding per
+        artifact).
         """
         if dtype not in quant.PAYLOAD_DTYPES:
             raise ValueError(
@@ -255,8 +263,8 @@ class AnchorIndex:
             quant.dequantize(cur_payload) if self._quantized
             else jnp.asarray(cur_payload, jnp.float32)
         )
-        if dtype == "int8":
-            new = quant.quantize_ranc(dense, tile)
+        if dtype in quant.CODE_DTYPES:
+            new = quant.quantize_ranc(dense, tile, code_dtype=dtype)
         elif dtype == "bfloat16":
             new = dense.astype(jnp.bfloat16)
         else:
@@ -610,12 +618,21 @@ class AnchorIndex:
         ck = Checkpointer(path, async_save=False)
         ck.save(_CKPT_STEP, tree, specs)
         # stamp the lowest version whose on-disk features this index uses
-        if self.item_tokens is not None:
+        if self._quantized and self.r_anc.code_dtype != "int8":
+            version = 4          # sub-int8 codes: packed int4 / fp8-e4m3
+        elif self.item_tokens is not None:
             version = 3
         elif self._quantized:
             version = 2
         else:
             version = 1
+        payload_meta = {
+            "dtype": self.payload_dtype,
+            "tile": self.r_anc.tile if self._quantized else None,
+        }
+        if self._quantized:
+            payload_meta["code_dtype"] = self.r_anc.code_dtype
+            payload_meta["n_cols"] = self.r_anc.n_cols
         meta = {
             "format_version": version,
             "k_q": self.k_q,
@@ -623,10 +640,7 @@ class AnchorIndex:
             "n_items": self.n_items,
             "dtype": str(self.r_anc.dtype),
             "has_latents": self.has_latents,
-            "payload": {
-                "dtype": self.payload_dtype,
-                "tile": self.r_anc.tile if self._quantized else None,
-            },
+            "payload": payload_meta,
         }
         tmp = os.path.join(path, _META_FILE + ".tmp")
         with open(tmp, "w") as f:
@@ -656,10 +670,13 @@ class AnchorIndex:
         tree = Checkpointer(path, async_save=False).restore(_CKPT_STEP, like, mesh=mesh)
         if "r_codes" in tree:
             payload = meta.get("payload") or {}
+            # v2/v3 meta predates sub-int8 codes: default to the int8 layout
             tree["r_anc"] = QuantizedRanc(
                 codes=tree.pop("r_codes"),
                 scales=tree.pop("r_scales"),
                 tile=int(payload.get("tile") or quant.DEFAULT_TILE),
+                code_dtype=str(payload.get("code_dtype") or "int8"),
+                n_cols=int(payload.get("n_cols", -1)),
             )
         return cls(**tree)
 
@@ -707,6 +724,8 @@ class AnchorIndex:
                 codes=put(idx.r_anc.codes, P(None, axes)),
                 scales=put(idx.r_anc.scales, P(axes)),
                 tile=idx.r_anc.tile,
+                code_dtype=idx.r_anc.code_dtype,
+                n_cols=idx.r_anc.n_cols,
             )
         else:
             r_anc = put(idx.r_anc, P(None, axes))
@@ -782,6 +801,7 @@ class AnchorIndex:
             raise ValueError(f"k={k} > per-shard items {n_local}")
         quantized = self._quantized
         tile_q = self.r_anc.tile if quantized else 0
+        cdt = self.r_anc.code_dtype if quantized else "int8"
 
         def body(eq, r_local, scales_local, inv_local):
             shard_id = jnp.int32(0)
@@ -790,7 +810,9 @@ class AnchorIndex:
             if quantized:
                 # codes + scales arrive co-sharded: the local slab is a
                 # self-contained payload over this shard's whole tiles
-                r_local = QuantizedRanc(r_local, scales_local, tile_q)
+                # (shard widths are whole even tiles, so the packed width
+                # sentinel n_cols=-1 resolves correctly per shard)
+                r_local = QuantizedRanc(r_local, scales_local, tile_q, cdt)
             mask = jnp.broadcast_to(inv_local[None, :], (eq.shape[0], n_local))
             v, i = approx_topk_op(
                 eq, r_local, None, k, tile=min(tile, n_local),

@@ -40,21 +40,30 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .quant import unpack_int4
+
 NEG_INF = -1e30
 
 
-def pad_to_tile(tile: int, r_anc, noise=None, mask=None, scales=None):
+def pad_to_tile(tile: int, r_anc, noise=None, mask=None, scales=None,
+                pack: int = 1, n: int | None = None):
     """Zero-pad the item axis to a tile multiple (shared by both backends).
 
     ``scales`` is the optional (N,) per-column dequantization scale vector of
-    an int8 payload; padded columns carry scale 1.0 (their codes pad to 0,
-    so the padded scores are exact zeros and the n_items bound masks them).
+    a quantized payload; padded columns carry scale 1.0 (their codes pad to
+    0, so the padded scores are exact zeros and the n_items bound masks
+    them).  ``pack`` > 1 means ``r_anc`` holds packed codes (int4: 2 logical
+    columns per stored byte) — it is padded in *packed* coordinates, which
+    tile-evenness keeps exact; ``n`` is then the logical column count.
     """
-    n = r_anc.shape[1]
+    if n is None:
+        n = r_anc.shape[1] * pack
     n_pad = pl.cdiv(n, tile) * tile
+    m_pad = n_pad // pack
+    if r_anc.shape[1] != m_pad:
+        r_anc = jnp.pad(r_anc, ((0, 0), (0, m_pad - r_anc.shape[1])))
     if n_pad != n:
         pad = ((0, 0), (0, n_pad - n))
-        r_anc = jnp.pad(r_anc, pad)
         noise = jnp.pad(noise, pad) if noise is not None else None
         mask = jnp.pad(mask, pad) if mask is not None else None
         if scales is not None:
@@ -64,13 +73,14 @@ def pad_to_tile(tile: int, r_anc, noise=None, mask=None, scales=None):
 
 def _approx_topk_kernel(
     e_q_ref,        # (B, k_q)
-    r_anc_ref,      # (k_q, T) — fp32/bf16 scores or int8 quantized codes
+    r_anc_ref,      # (k_q, T) scores / int8 / fp8 — or (k_q, T/2) packed int4
     anchors_ref,    # (B, A) int32 — already-selected anchor ids (global)
     *rest,          # [scales_ref (1,T)] [noise_ref (B,T)] [mask_ref (B,T)]
                     # vals_ref, idx_ref
     tile: int,
     k: int,
     n_items: int,
+    pack: int,
     has_scales: bool,
     has_noise: bool,
     has_mask: bool,
@@ -82,10 +92,14 @@ def _approx_topk_kernel(
     vals_ref, idx_ref = next(it), next(it)
     ti = pl.program_id(0)
     e_q = e_q_ref[...].astype(jnp.float32)                 # (B, k_q)
-    # fused dequant front end: an int8 tile widens in registers; the
+    # fused dequant front end: an int8/fp8 tile widens in registers (a
+    # packed int4 tile additionally sign-extends its nibbles first); the
     # per-column scale factors out of the contraction and multiplies the
     # (B, T) GEMM output, so the fp32 R_anc tile never exists in memory.
-    r = r_anc_ref[...].astype(jnp.float32)                 # (k_q, T)
+    r = r_anc_ref[...]
+    if pack == 2:
+        r = unpack_int4(r)                                 # (k_q, T) int8
+    r = r.astype(jnp.float32)                              # (k_q, T)
     scores = jax.lax.dot_general(
         e_q, r, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )                                                       # (B, T)
@@ -123,7 +137,7 @@ def _approx_topk_kernel(
 
 def approx_topk_tiles(
     e_q: jax.Array,        # (B, k_q) f32
-    r_anc: jax.Array,      # (k_q, N) scores — or int8 codes (pass scales)
+    r_anc: jax.Array,      # (k_q, N) scores — or quantized codes (pass scales)
     anchors: jax.Array,    # (B, A) int32 — global ids to mask (pad with -1)
     k: int,
     *,
@@ -132,24 +146,29 @@ def approx_topk_tiles(
     noise: jax.Array | None = None,   # (B, N) additive noise (Gumbel sampling)
     mask: jax.Array | None = None,    # (B, N) bool — True = suppress
     n_valid: int | None = None,       # real item count when N is padded
-    scales: jax.Array | None = None,  # (N,) per-column dequant scales (int8)
+    scales: jax.Array | None = None,  # (N,) per-column dequant scales
+    pack: int = 1,                    # 2 = r_anc is packed int4 (k_q, N/2)
+    n_cols: int | None = None,        # logical N when r_anc is packed
 ):
     """Returns per-tile (vals (B, n_tiles, k), idx (B, n_tiles, k))."""
     b, k_q = e_q.shape
-    _, n = r_anc.shape
+    n = r_anc.shape[1] * pack if n_cols is None else n_cols
+    if pack > 1 and tile % pack:
+        tile += pack - tile % pack
     r_anc, noise, mask, scales, n_pad = pad_to_tile(
-        tile, r_anc, noise, mask, scales
+        tile, r_anc, noise, mask, scales, pack=pack, n=n
     )
     n_tiles = n_pad // tile
     kernel = functools.partial(
         _approx_topk_kernel, tile=tile, k=k,
         n_items=n if n_valid is None else min(n_valid, n),
+        pack=pack,
         has_scales=scales is not None,
         has_noise=noise is not None, has_mask=mask is not None,
     )
     in_specs = [
         pl.BlockSpec((b, k_q), lambda ti: (0, 0)),
-        pl.BlockSpec((k_q, tile), lambda ti: (0, ti)),
+        pl.BlockSpec((k_q, tile // pack), lambda ti: (0, ti)),
         pl.BlockSpec(anchors.shape, lambda ti: (0, 0)),
     ]
     inputs = [e_q, r_anc, anchors]

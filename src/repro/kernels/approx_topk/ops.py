@@ -16,12 +16,13 @@ behavior (no (B, N) float score matrix is ever formed):
 emulation) and the real kernel otherwise.
 
 **Quantized payloads.**  ``r_anc`` may be a
-:class:`~repro.kernels.approx_topk.quant.QuantizedRanc` (int8 codes +
-per-item-tile fp32 scales).  Both backends then run a fused dequant-matmul
-front end: each grid step loads an int8 tile, widens it in registers,
-contracts with ``e_q`` in fp32 accumulation, and applies the per-column
-scale to the (B, T) GEMM output — on TPU that is ~4x fewer HBM bytes per
-step, and the fp32 R_anc never exists anywhere.
+:class:`~repro.kernels.approx_topk.quant.QuantizedRanc` (int8, packed
+int4, or fp8 codes + per-item-tile fp32 scales).  Both backends then run a
+fused dequant-matmul front end: each grid step loads a code tile, widens it
+in registers (sign-extending nibbles for int4), contracts with ``e_q`` in
+fp32 accumulation, and applies the per-column scale to the (B, T) GEMM
+output — on TPU that is 4-8x fewer HBM bytes per step, and the fp32 R_anc
+never exists anywhere.
 
 **Deterministic tie-breaking.**  Exact score ties break by ascending item
 index, in both backends: per tile the selection is index-stable
@@ -40,11 +41,11 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import NEG_INF, approx_topk_tiles, pad_to_tile
-from .quant import QuantizedRanc
+from .quant import QuantizedRanc, unpack_int4
 
 
 def _scan_topk_tiles(e_q, r_anc, anchors, k, tile, noise, mask, n_valid,
-                     scales=None):
+                     scales=None, pack=1, n_cols=None):
     """lax.scan tiled reference with kernel-identical tie-breaks.
 
     ``tile`` is rebalanced so the last tile carries at most n_tiles-1 padded
@@ -53,22 +54,32 @@ def _scan_topk_tiles(e_q, r_anc, anchors, k, tile, noise, mask, n_valid,
     per-step dispatch on CPU.  ``anchors=None`` skips the id-compare
     entirely — callers that maintain a (B, N) selected mask pass that
     instead (O(B·T) per tile vs O(B·T·A)).  ``scales`` (N,), when given, is
-    the int8 payload's per-column dequant scale, applied to each tile's GEMM
-    output (scale rebalancing is free: scales are per *column*, so the scan
-    tile width need not match the payload's quantization tile)."""
+    the quantized payload's per-column dequant scale, applied to each tile's
+    GEMM output (scale rebalancing is free: scales are per *column*, so the
+    scan tile width need not match the payload's quantization tile).
+    ``pack=2`` streams packed int4 codes — each step slices tile/2 bytes and
+    sign-extends the nibbles in registers (the rebalanced tile is rounded up
+    to even so tile boundaries stay byte-aligned)."""
     b, k_q = e_q.shape
-    n = r_anc.shape[1]
+    n = r_anc.shape[1] * pack if n_cols is None else n_cols
     n_tiles = -(-n // tile)
     tile = -(-n // n_tiles)
+    if pack > 1 and tile % pack:
+        tile += pack - tile % pack
     r_anc, noise, mask, scales, n_pad = pad_to_tile(
-        tile, r_anc, noise, mask, scales
+        tile, r_anc, noise, mask, scales, pack=pack, n=n
     )
+    n_tiles = n_pad // tile             # evenness rounding can shrink this
     n_eff = n if n_valid is None else min(n_valid, n)
     e_q32 = e_q.astype(jnp.float32)
     arange_t = jnp.arange(tile, dtype=jnp.int32)
 
     def step(_, lo):
-        r_tile = jax.lax.dynamic_slice(r_anc, (0, lo), (k_q, tile))
+        r_tile = jax.lax.dynamic_slice(
+            r_anc, (0, lo // pack), (k_q, tile // pack)
+        )
+        if pack == 2:
+            r_tile = unpack_int4(r_tile)
         scores = e_q32 @ r_tile.astype(jnp.float32)            # (B, tile)
         if scales is not None:
             scores = scores * jax.lax.dynamic_slice(
@@ -128,13 +139,16 @@ def approx_topk_op(
     """
     if isinstance(r_anc, QuantizedRanc):
         codes, scales = r_anc.codes, r_anc.col_scales()
+        pack, n_cols = r_anc.packing, r_anc.shape[1]
     else:
         codes, scales = r_anc, None
+        pack, n_cols = 1, None
     if impl == "auto":
         impl = "scan" if interpret else "pallas"
     if impl == "scan":
         vals, idx = _scan_topk_tiles(
-            e_q, codes, anchors, k, tile, noise, mask, n_valid, scales=scales
+            e_q, codes, anchors, k, tile, noise, mask, n_valid,
+            scales=scales, pack=pack, n_cols=n_cols,
         )
     elif impl == "pallas":
         if anchors is None:
@@ -142,6 +156,7 @@ def approx_topk_op(
         vals, idx = approx_topk_tiles(
             e_q, codes, anchors, k, tile=tile, interpret=interpret,
             noise=noise, mask=mask, n_valid=n_valid, scales=scales,
+            pack=pack, n_cols=n_cols,
         )
     else:
         raise ValueError(f"unknown impl '{impl}'")

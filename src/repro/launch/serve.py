@@ -26,7 +26,8 @@ The production serving loop the paper's technique plugs into:
 CLI:  PYTHONPATH=src python -m repro.launch.serve --requests 64 \
           --retriever {adacur,anncur,rerank} [--first-stage {none,de,bm25}] \
           [--index-path DIR] [--scorer {synthetic,real-ce}] [--cache] \
-          [--payload-dtype {float32,bfloat16,int8}] [--mesh DATAxITEMS]
+          [--payload-dtype {float32,bfloat16,int8,int4,fp8}] \
+          [--round-kernel {staged,persistent}] [--mesh DATAxITEMS]
 
 ``--first-stage de|bm25`` serves the multi-stage hybrid: a dual-encoder or
 BM25 generator proposes a per-query shortlist and the ADACUR search is
@@ -379,11 +380,19 @@ def main() -> None:
                          "the flash-attention path)")
     ap.add_argument("--cache", action="store_true",
                     help="wrap the scorer in a (query, item) score cache")
-    ap.add_argument("--payload-dtype", choices=("float32", "bfloat16", "int8"),
+    ap.add_argument("--payload-dtype",
+                    choices=("float32", "bfloat16", "int8", "int4", "fp8"),
                     default="float32",
-                    help="storage/streaming dtype of the R_anc payload: int8 "
-                         "stores per-tile codes+scales (~4x smaller index, "
-                         "fused dequant in the kernel)")
+                    help="storage/streaming dtype of the R_anc payload: the "
+                         "coded dtypes store per-tile codes+scales with fused "
+                         "dequant in the kernel (int8/fp8 ~4x smaller index, "
+                         "packed int4 ~8x)")
+    ap.add_argument("--round-kernel", choices=("staged", "persistent"),
+                    default="staged",
+                    help="persistent: one fused payload sweep per round "
+                         "(estimate + Gumbel top-k + provisional monitor in "
+                         "a single pass; requires --fused). Bit-identical "
+                         "rankings to staged")
     ap.add_argument("--mesh", default=None, metavar="DATAxITEMS",
                     help="serve over a (data x items) mesh, e.g. 2x4: the "
                          "items axis shards the index payload, the data axis "
@@ -439,6 +448,7 @@ def main() -> None:
         k_anchor=args.budget // 2, n_rounds=args.rounds, budget_ce=args.budget,
         strategy="topk", k_retrieve=100, loop_mode="fori",
         use_fused_topk=args.fused, payload_dtype=args.payload_dtype,
+        round_kernel=args.round_kernel,
     )
     if args.payload_dtype != "float32":
         fp32_bytes = index.payload_nbytes
@@ -607,6 +617,7 @@ def _serve_real_ce(args) -> None:
         k_anchor=args.budget // 2, n_rounds=args.rounds, budget_ce=args.budget,
         strategy="topk", k_retrieve=50, loop_mode="fori",
         use_fused_topk=args.fused, payload_dtype=args.payload_dtype,
+        round_kernel=args.round_kernel,
     )
     if args.mesh:
         # device-resident CE: the token table rides on the index (sharded

@@ -132,23 +132,27 @@ class TestScoredPairInvariants:
         split=st.booleans(),
         strategy=st.sampled_from(["topk", "softmax"]),
         epsilon=st.sampled_from([0.0, 0.25]),
-        payload=st.sampled_from(["float32", "int8"]),
+        payload=st.sampled_from(["float32", "int8", "int4"]),
+        round_kernel=st.sampled_from(["staged", "persistent"]),
         seed=st.integers(min_value=0, max_value=2**31 - 1),
     )
     def test_dedup_and_exact_call_count(self, dom, mode, split, strategy,
-                                        epsilon, payload, seed):
+                                        epsilon, payload, round_kernel, seed):
         """(b) + (c) in one engine run: every scored (query, item) pair is
         unique within its search row, and the measured total equals the
         plan for the rounds actually executed.  Holds unchanged under the
-        int8 quantized payload: quantization perturbs *which* items the
+        quantized payloads: quantization perturbs *which* items the
         approximation proposes, never the dedup/suppression bookkeeping or
-        the budget accounting."""
+        the budget accounting.  Likewise under the persistent round kernel,
+        which changes how the payload is swept, not what gets scored."""
         cfg = AdaCURConfig(
             k_anchor=16, n_rounds=4, budget_ce=32 if split else 16,
             split_budget=split, strategy=strategy, round_epsilon=epsilon,
             k_retrieve=8, payload_dtype=payload, payload_tile=64,
             loop_mode="unrolled" if mode == "unrolled" else "fori",
             early_exit_tol=0.4 if mode == "early" else 0.0,
+            use_fused_topk=round_kernel == "persistent",
+            round_kernel=round_kernel, fused_tile=128,
         )
         scorer = TabulatedScorer(dom["m"], record_pairs=True)
         run = engine.make_engine(scorer, cfg)
@@ -193,6 +197,64 @@ class TestScoredPairInvariants:
             assert len(pairs) == len(set(pairs)), f"row {r}: pair scored twice"
         planned = ce_call_plan(cfg, int(res.rounds_done)) * N_TEST_Q
         assert scorer.stats.ce_calls == planned
+
+    @pytest.mark.parametrize("payload", ["float32", "int4"])
+    @pytest.mark.parametrize("mode", ["unrolled", "fori", "early"])
+    def test_persistent_kernel_invariants_every_loop_mode(self, dom, mode,
+                                                          payload):
+        """Deterministic coverage of the persistent-round acceptance
+        property: measured == planned CE calls and no-pair-scored-twice
+        hold under ``round_kernel='persistent'`` in every loop mode —
+        including 'early', where the software-pipelined monitored loop
+        fuses the monitor sweep with the next round's sample."""
+        cfg = AdaCURConfig(
+            k_anchor=16, n_rounds=4, budget_ce=32, split_budget=True,
+            k_retrieve=8, payload_dtype=payload, payload_tile=64,
+            loop_mode="unrolled" if mode == "unrolled" else "fori",
+            early_exit_tol=0.4 if mode == "early" else 0.0,
+            use_fused_topk=True, round_kernel="persistent", fused_tile=128,
+        )
+        scorer = TabulatedScorer(dom["m"], record_pairs=True)
+        run = engine.make_engine(scorer, cfg)
+        res = jax.block_until_ready(
+            run(dom["r_anc"], dom["test_q"], jax.random.PRNGKey(123))
+        )
+        for r, pairs in _pair_sets_per_row(scorer.call_log).items():
+            assert len(pairs) == len(set(pairs)), f"row {r}: pair scored twice"
+        planned = ce_call_plan(cfg, int(res.rounds_done)) * N_TEST_Q
+        assert scorer.stats.ce_calls == planned
+
+    @pytest.mark.parametrize("mode", ["unrolled", "fori", "early"])
+    def test_persistent_equals_staged_bitwise(self, dom, mode):
+        """The engine-level bitwise contract: identical results (ids,
+        scores, rounds_done) from the staged and persistent round kernels
+        on the same key, per loop mode."""
+        base = dict(
+            k_anchor=16, n_rounds=4, budget_ce=32, split_budget=True,
+            k_retrieve=8, payload_dtype="int8", payload_tile=64,
+            loop_mode="unrolled" if mode == "unrolled" else "fori",
+            early_exit_tol=0.4 if mode == "early" else 0.0,
+            use_fused_topk=True, fused_tile=128,
+        )
+        key = jax.random.PRNGKey(9)
+        out = {}
+        for rk in ("staged", "persistent"):
+            cfg = AdaCURConfig(round_kernel=rk, **base)
+            run = engine.make_engine(TabulatedScorer(dom["m"]), cfg)
+            out[rk] = jax.block_until_ready(
+                run(dom["r_anc"], dom["test_q"], key)
+            )
+        np.testing.assert_array_equal(
+            np.asarray(out["staged"].topk_idx),
+            np.asarray(out["persistent"].topk_idx),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out["staged"].topk_scores),
+            np.asarray(out["persistent"].topk_scores),
+        )
+        assert int(out["staged"].rounds_done) == int(
+            out["persistent"].rounds_done
+        )
 
     @_settings(max_examples=6)
     @given(

@@ -41,6 +41,15 @@ CASES = {
         k_anchor=48, n_rounds=4, budget_ce=48, split_budget=False,
         k_retrieve=10, loop_mode="unrolled",
     ),
+    # the persistent round kernel under the software-pipelined monitored
+    # loop (early-exit monitor + next round's sample share one payload
+    # sweep) — pins the riskiest fusion path; staged vs persistent parity
+    # itself is asserted bitwise in test_engine_properties
+    "fori_persistent_monitored": AdaCURConfig(
+        k_anchor=24, n_rounds=4, budget_ce=48, k_retrieve=10, loop_mode="fori",
+        use_fused_topk=True, fused_tile=128, round_kernel="persistent",
+        early_exit_tol=0.4,
+    ),
 }
 
 

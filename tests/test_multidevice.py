@@ -20,7 +20,10 @@ tests/test_multidevice.py <name>``):
   == the unsharded index, fp32 and int8 co-sharded payloads
 - the FULL SPMD engine (engine.make_sharded_engine) on a (data x items)
   mesh: bit-identical top-k vs the single-device engine across loop modes
-  x payload dtypes x a mutated padded-capacity index; the property-suite
+  x payload dtypes x a mutated padded-capacity index; the persistent
+  round kernel + int4/fp8 payloads on a 2x2 mesh (bit-equal to BOTH the
+  single-device persistent engine and the sharded staged engine,
+  including the software-pipelined monitored loop); the property-suite
   invariants (no pair CE-scored twice, measured == planned calls) under a
   2x2 mesh; zero retraces across runtime n_rounds; first-stage candidate
   restriction (a per-query ``eligible`` mask sharded over the mesh ==
@@ -376,6 +379,59 @@ def check_engine_spmd_parity():
         assert scorer.stats.ce_calls == ce_call_plan(cfg, rounds) * n_tq, label
 
 
+def check_engine_spmd_persistent():
+    """The persistent round kernel + sub-int8 payloads under the SPMD
+    engine on a 2x2 (data x items) mesh: bit-identical to the SAME config
+    single-device, and bit-identical to the STAGED sharded engine — the
+    fused sweep changes how each shard reads its payload slab, never the
+    numbers.  Covers the software-pipelined monitored loop ('early') and
+    the packed int4 / fp8 payload tiles."""
+    import jax, numpy as np
+
+    from repro.configs.base import AdaCURConfig
+    from repro.core.engine import make_engine, make_sharded_engine
+    from repro.core.scorer import TabulatedScorer
+    from repro.kernels.approx_topk import quant
+
+    m, r_anc, test_q = _engine_domain()
+    mesh = jax.make_mesh((2, 2), ("data", "items"))
+    key = jax.random.PRNGKey(11)
+    cases = [("fori", "int4"), ("early", "int4"), ("early", "float32")]
+    if quant.fp8_supported():
+        cases.append(("fori", "fp8"))
+    for mode, payload in cases:
+        base = dict(
+            k_anchor=16, n_rounds=4, budget_ce=32, k_retrieve=10,
+            use_fused_topk=True, fused_tile=128,
+            payload_dtype=payload, payload_tile=128, loop_mode="fori",
+            early_exit_tol=0.3 if mode == "early" else 0.0,
+        )
+        cfg = AdaCURConfig(round_kernel="persistent", **base)
+        label = f"{mode}/{payload}"
+        r1 = make_engine(TabulatedScorer(m), cfg)(r_anc, test_q, key)
+        r2 = jax.block_until_ready(
+            make_sharded_engine(TabulatedScorer(m), cfg, mesh)(
+                r_anc, test_q, key
+            )
+        )
+        r3 = jax.block_until_ready(
+            make_sharded_engine(
+                TabulatedScorer(m), AdaCURConfig(round_kernel="staged", **base),
+                mesh,
+            )(r_anc, test_q, key)
+        )
+        for ref, tag in ((r1, "single-device"), (r3, "sharded-staged")):
+            np.testing.assert_array_equal(
+                np.asarray(r2.topk_idx), np.asarray(ref.topk_idx),
+                err_msg=f"{label} vs {tag}",
+            )
+            np.testing.assert_array_equal(
+                np.asarray(r2.topk_scores), np.asarray(ref.topk_scores),
+                err_msg=f"{label} vs {tag}",
+            )
+            assert int(r2.rounds_done) == int(ref.rounds_done), (label, tag)
+
+
 def check_engine_spmd_mutated_index():
     """Sharded parity survives the index lifecycle: a padded-capacity index
     mutated by remove_items + add_items serves bit-identical results (and
@@ -699,6 +755,7 @@ CHECKS = {
     "anchor_index_shard": check_anchor_index_shard,
     "quantized_index_shard": check_quantized_index_shard,
     "engine_spmd_parity": check_engine_spmd_parity,
+    "engine_spmd_persistent": check_engine_spmd_persistent,
     "engine_spmd_mutated_index": check_engine_spmd_mutated_index,
     "engine_spmd_invariants": check_engine_spmd_invariants,
     "engine_spmd_eligible": check_engine_spmd_eligible,

@@ -62,6 +62,38 @@ class TestQuantizePrimitives:
         p = quant.quantize_ranc(r, tile=512)
         assert p.nbytes / r.nbytes <= 0.3
 
+    def test_int4_pack_unpack_round_trip(self):
+        """Packed-nibble codes: two columns per byte, exact code recovery,
+        and the dequantized payload reconstructs within half an int4 lsb."""
+        r = jax.random.normal(jax.random.PRNGKey(2), (16, 384))
+        p = quant.quantize_ranc(r, tile=64, code_dtype="int4")
+        assert p.codes.dtype == jnp.uint8
+        assert p.codes.shape == (16, 192)            # two codes per byte
+        assert p.shape == (16, 384)
+        assert p.nbytes / r.nbytes <= 0.15
+        deq = quant.dequantize(p)
+        assert float(jnp.abs(deq - r).max()) <= float(p.scales.max()) * 0.5 + 1e-6
+        # re-quantizing the reconstruction is a fixpoint of the code grid
+        p2 = quant.quantize_ranc(deq, tile=64, code_dtype="int4")
+        np.testing.assert_array_equal(np.asarray(p.codes), np.asarray(p2.codes))
+
+    def test_int4_requires_even_tile(self):
+        r = jnp.ones((4, 128))
+        with pytest.raises(ValueError, match="even tile"):
+            quant.quantize_ranc(r, tile=63, code_dtype="int4")
+
+    @pytest.mark.skipif(not quant.fp8_supported(), reason="no float8 in build")
+    def test_fp8_round_trip_and_bytes(self):
+        r = 3.0 * jax.random.normal(jax.random.PRNGKey(3), (16, 384))
+        p = quant.quantize_ranc(r, tile=64, code_dtype="fp8")
+        assert p.codes.dtype == jnp.float8_e4m3fn
+        assert p.nbytes / r.nbytes <= 0.3
+        deq = quant.dequantize(p)
+        # fp8-e4m3 carries a 3-bit mantissa: error <= |x| * 2^-4 everywhere
+        # the code is normal, plus one subnormal ulp (scale * 2^-9) near 0
+        bound = jnp.abs(r) * 2.0 ** -4 + float(p.scales.max()) * 2.0 ** -9 + 1e-7
+        assert bool((jnp.abs(deq - r) <= bound).all())
+
     def test_index_quantize_policy(self, dom):
         idx = AnchorIndex.from_r_anc(dom["m"][:40])
         q = idx.quantize("int8", tile=TILE)
@@ -176,8 +208,10 @@ class TestQuantizedPersistence:
         path = str(tmp_path / "qindex")
         index.save(path)
         meta = json.load(open(os.path.join(path, "index_meta.json")))
-        assert meta["format_version"] == 2
-        assert meta["payload"] == {"dtype": "int8", "tile": TILE}
+        assert meta["format_version"] == 2       # int8 keeps the v2 layout
+        assert meta["payload"] == {
+            "dtype": "int8", "tile": TILE, "code_dtype": "int8", "n_cols": -1,
+        }
         loaded = AnchorIndex.load(path)
         assert loaded.payload_dtype == "int8"
         c0, s0 = _codes_scales(index)
@@ -187,6 +221,40 @@ class TestQuantizedPersistence:
         key = jax.random.PRNGKey(1)
         res_m = AdaCURRetriever.from_index(index, sf, CFG).search(dom["test_q"], key)
         res_l = AdaCURRetriever.from_index(loaded, sf, CFG).search(dom["test_q"], key)
+        np.testing.assert_array_equal(
+            np.asarray(res_m.topk_idx), np.asarray(res_l.topk_idx)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res_m.topk_scores), np.asarray(res_l.topk_scores)
+        )
+
+    @pytest.mark.parametrize("dtype", ["int4", "fp8"])
+    def test_v4_sub_int8_save_load_round_trip(self, dom, tmp_path, dtype):
+        """Sub-int8 payloads stamp format v4, record code_dtype/n_cols in
+        the meta, and round-trip codes+scales and search results exactly."""
+        if dtype == "fp8" and not quant.fp8_supported():
+            pytest.skip("no float8 in build")
+        sf = dom["ce"].score_fn()
+        index = AnchorIndex.from_r_anc(dom["m"][:40], capacity=320).quantize(
+            dtype, tile=TILE
+        )
+        path = str(tmp_path / f"{dtype}index")
+        index.save(path)
+        meta = json.load(open(os.path.join(path, "index_meta.json")))
+        assert meta["format_version"] == 4
+        assert meta["payload"]["code_dtype"] == dtype
+        assert meta["payload"]["tile"] == TILE
+        loaded = AnchorIndex.load(path)
+        assert loaded.payload_dtype == dtype
+        c0, s0 = _codes_scales(index)
+        c1, s1 = _codes_scales(loaded)
+        # all code dtypes here are 1-byte; compare raw bits (fp8 included)
+        np.testing.assert_array_equal(c0.view(np.uint8), c1.view(np.uint8))
+        np.testing.assert_array_equal(s0, s1)
+        key = jax.random.PRNGKey(1)
+        cfg = replace(CFG, payload_dtype=dtype)
+        res_m = AdaCURRetriever.from_index(index, sf, cfg).search(dom["test_q"], key)
+        res_l = AdaCURRetriever.from_index(loaded, sf, cfg).search(dom["test_q"], key)
         np.testing.assert_array_equal(
             np.asarray(res_m.topk_idx), np.asarray(res_l.topk_idx)
         )
@@ -276,6 +344,39 @@ class TestQuantizedMutation:
         np.testing.assert_array_equal(
             np.asarray(grown.item_ids), np.asarray(index.item_ids)
         )
+
+    @pytest.mark.parametrize("dtype", ["int4", "fp8"])
+    def test_sub_int8_remove_add_round_trip_bit_identical(self, dom, dtype):
+        """The tile-local requantization contract holds below int8: a
+        remove -> add cycle leaves every untouched tile's packed codes and
+        scales bit-identical, and restores the touched region within the
+        code grid's error bound."""
+        if dtype == "fp8" and not quant.fp8_supported():
+            pytest.skip("no float8 in build")
+        m = dom["m"]
+        index = AnchorIndex.from_r_anc(m[:40], capacity=320).quantize(
+            dtype, tile=TILE
+        )
+        c0, s0 = _codes_scales(index)
+        shrunk = index.remove_items(jnp.arange(260, 300))
+        grown = shrunk.add_items(jnp.arange(260, 300), cols=m[:40, 260:300])
+        c2, s2 = _codes_scales(grown)
+        t0 = 260 // TILE                         # first touched tile
+        kc = t0 * TILE // index.r_anc.packing    # prefix width in code cols
+        np.testing.assert_array_equal(
+            c2.view(np.uint8)[:, :kc], c0.view(np.uint8)[:, :kc]
+        )
+        np.testing.assert_array_equal(s2[:t0], s0[:t0])
+        assert grown.n_items == 300
+        np.testing.assert_array_equal(
+            np.asarray(grown.item_ids), np.asarray(index.item_ids)
+        )
+        # restored columns reconstruct within half an ulp of their tile's
+        # grid (int4: uniform lsb; fp8: ulp(448) = 32 code units at amax)
+        deq = np.asarray(quant.dequantize(grown.r_anc))[:, 260:300]
+        err = np.abs(deq - np.asarray(m[:40, 260:300]))
+        s_max = float(np.asarray(s2[t0:]).max())
+        assert err.max() <= s_max * (0.5 if dtype == "int4" else 16.0) + 1e-5
 
     def test_add_items_requantizes_only_touched_tiles(self, dom):
         m = dom["m"]
